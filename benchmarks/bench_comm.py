@@ -1,0 +1,43 @@
+"""Figure 4 reproduction (modeled): BusBw vs message size and minipod spread.
+
+Encodes the paper's measured curves: collectives need ~256 MB to saturate,
+send-recv saturates at ~2 MB; spanning extra minipods costs up to 17%
+(collectives) / 70% (P2P).
+"""
+
+import time
+
+from repro.core.netmodel import MB, NetModel
+
+
+def run() -> list[tuple]:
+    net = NetModel()
+    rows = []
+    t0 = time.perf_counter()
+    for size_mb in (1, 8, 64, 256, 2048):
+        bw = net.collective_busbw(size_mb * MB, spread=1) / 1e9
+        rows.append((f"busbw_collective_{size_mb}MB_spread1_GBps",
+                     (time.perf_counter() - t0) * 1e6, round(bw, 2)))
+    for size_mb in (0.25, 2, 32):
+        bw = net.p2p_busbw(size_mb * MB, spread=1) / 1e9
+        rows.append((f"busbw_p2p_{size_mb}MB_spread1_GBps",
+                     (time.perf_counter() - t0) * 1e6, round(bw, 2)))
+    # spread degradation at saturated sizes (Fig. 4b/4c)
+    c1 = net.collective_busbw(2048 * MB, 1)
+    c3 = net.collective_busbw(2048 * MB, 3)
+    p1 = net.p2p_busbw(32 * MB, 1)
+    p3 = net.p2p_busbw(32 * MB, 3)
+    rows.append(("busbw_collective_degradation_spread3_pct", 0.0,
+                 round(100 * (1 - c3 / c1), 1)))
+    rows.append(("busbw_p2p_degradation_spread3_pct", 0.0,
+                 round(100 * (1 - p3 / p1), 1)))
+    rows.append(("paper_claim_17pct_collective_ok", 0.0,
+                 int(abs((1 - c3 / c1) - 0.17) < 0.02)))
+    rows.append(("paper_claim_70pct_p2p_ok", 0.0,
+                 int(abs((1 - p3 / p1) - 0.70) < 0.02)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

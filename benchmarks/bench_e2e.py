@@ -1,0 +1,109 @@
+"""Figure 9 / Figure 5 reproduction (simulated): end-to-end training
+throughput under Arnold vs a MegaScale-style bin-packing baseline.
+
+Paper claims: +5.7% at 208 GPUs (26 nodes), +10.6% at 9600+ GPUs (1200+
+nodes, >50% of the cluster); dense models are PP-bound (DP-aligned gives no
+speedup), MoE gains from both groups; improvement grows with model scale
+(Fig. 5b).  Throughput comes from the calibrated BusBw/step-time model --
+the same methodology the paper uses for its own simulator experiments.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    Cluster,
+    JobSpec,
+    ModelSpec,
+    build_comm_matrix,
+    gpu_packing,
+    schedule_mip,
+    throughput_of_placement,
+)
+
+DENSE_24B = ModelSpec(
+    name="dense-24b", hidden=6144, layers=52, vocab=100352, seq_len=4096,
+    global_batch=1024, micro_batch=1, d_ff=24576,
+)
+MOE = ModelSpec(
+    name="moe-132b", hidden=6144, layers=40, vocab=100352, seq_len=4096,
+    global_batch=1024, micro_batch=1, n_experts=16, top_k=4, d_expert=10752,
+)
+
+
+def _compare(model, cluster, n_nodes, tp, pp, alpha, fragment_seed=None,
+             fragment_frac=0.45):
+    job = JobSpec(n_gpus=n_nodes * 8, tp=tp, pp=pp, model=model)
+    comm = build_comm_matrix(job)
+    if fragment_seed is not None:
+        # skewed fragmentation: earlier pods more occupied (realistic shared
+        # cluster), so naive consolidation crosses more pod boundaries
+        rng = np.random.default_rng(fragment_seed)
+        max_busy = cluster.n_nodes - comm.n_cells
+        weights = np.array(
+            [2.0 - cluster.nodes[n].minipod / cluster.n_minipods
+             for n in range(cluster.n_nodes)]
+        )
+        weights = weights / weights.sum()
+        busy = rng.choice(cluster.n_nodes,
+                          size=min(int(fragment_frac * cluster.n_nodes), max_busy),
+                          replace=False, p=weights)
+        cluster.allocate([int(b) for b in busy])
+    ours = schedule_mip(comm, cluster, alpha=alpha).placement
+    base = gpu_packing(comm, cluster)  # MegaScale-style consolidation
+    t_ours = throughput_of_placement(ours, steps=5)
+    t_base = throughput_of_placement(base, steps=5)
+    gain = 100.0 * (t_ours["tokens_per_s"] / t_base["tokens_per_s"] - 1.0)
+    return gain, t_ours, t_base
+
+
+def run() -> list[tuple]:
+    rows = []
+    t0 = time.perf_counter()
+
+    # medium scale: 26 nodes (208 GPUs, the paper's medium experiment),
+    # fragmented mid-size cluster
+    gain_med, to, tb = _compare(
+        DENSE_24B, Cluster.uniform(8, 24), n_nodes=26, tp=8, pp=2,
+        alpha=0.0, fragment_seed=1,
+    )
+    rows.append(("e2e_medium_dense_gain_pct", (time.perf_counter() - t0) * 1e6,
+                 round(gain_med, 2)))
+    rows.append(("e2e_medium_spreads_ours_dp_pp", 0.0,
+                 f"{to['dp_spread']}/{to['pp_spread']}"))
+    rows.append(("e2e_medium_spreads_base_dp_pp", 0.0,
+                 f"{tb['dp_spread']}/{tb['pp_spread']}"))
+
+    # full scale: 1200 nodes (9600 GPUs) in a 2000-node cluster (>50% usage)
+    gain_full, to, tb = _compare(
+        MOE, Cluster.uniform(16, 125), n_nodes=1200, tp=8, pp=8,
+        alpha=0.3, fragment_seed=2, fragment_frac=0.3,
+    )
+    rows.append(("e2e_full_9600gpu_moe_gain_pct", 0.0, round(gain_full, 2)))
+    rows.append(("e2e_full_comm_fraction", 0.0, round(to["comm_fraction"], 3)))
+
+    # Fig. 5b: improvement grows with model size.  Bigger models require
+    # deeper pipelines (layers and PP scale together at fixed layers/stage),
+    # which multiplies PP boundary traffic -- the paper's amplification
+    # mechanism.
+    gains = []
+    for layers, pp, nodes in ((26, 2, 16), (52, 4, 32), (104, 8, 64)):
+        model = ModelSpec(
+            name=f"dense-{layers}L", hidden=6144, layers=layers, vocab=100352,
+            seq_len=4096, global_batch=1024, micro_batch=1, d_ff=24576,
+        )
+        g, _, _ = _compare(model, Cluster.uniform(8, 24), nodes, 8, pp, 0.0,
+                           fragment_seed=3)
+        gains.append(g)
+        rows.append((f"e2e_scaling_{layers}L_pp{pp}_gain_pct", 0.0, round(g, 2)))
+    rows.append(("paper_claim_gain_grows_with_size_ok", 0.0,
+                 int(gains[0] <= gains[1] + 0.3 and gains[1] <= gains[2] + 0.3)))
+    rows.append(("paper_claim_full_scale_gain_positive_ok", 0.0,
+                 int(gain_full > 0)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

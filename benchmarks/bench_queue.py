@@ -1,0 +1,80 @@
+"""Figure 14 / Appendix H reproduction: allocation + retention rate over the
+reservation window, with/without strong reservation and JCT-guided backfill.
+
+Paper shape: Arnold is told the LPJ arrival 4 h ahead; retention decays to
+~0 by arrival (reserved nodes drained), while best-effort reservation leaves
+squatters that need manual preemption; disabling JCT backfill idles the
+reserved zone (lower allocation).
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    Cluster,
+    JCTPredictor,
+    JobSpec,
+    ModelSpec,
+    QueuePolicy,
+    TraceSimulator,
+    build_comm_matrix,
+    poisson_trace,
+    synthetic_trace,
+)
+
+MODEL7B = ModelSpec(
+    name="gpt-7b", hidden=4096, layers=32, vocab=50304, seq_len=2048,
+    global_batch=1024, micro_batch=1, d_ff=16384,
+)
+
+
+def _sim(reserve: bool, use_jct: bool, seed: int = 0):
+    cluster = Cluster.uniform(8, 20)  # 160 nodes
+    jobs, jct = synthetic_trace(600, seed=seed)
+    pred = JCTPredictor(n_bags=2, n_rounds=25).fit(jobs, jct)
+    policy = QueuePolicy(cluster, jct_predictor=pred, reserve=reserve,
+                         use_jct=use_jct)
+    sim = TraceSimulator(policy, tick=120.0)
+    trace = poisson_trace(250, mean_interarrival=60.0, mean_duration=2400.0,
+                          max_nodes=24, seed=seed)
+    comm = build_comm_matrix(
+        JobSpec(n_gpus=96 * 8, tp=8, pp=4, model=MODEL7B)  # 96-node LPJ
+    )
+    res = sim.run(trace, t_end=6 * 3600.0,
+                  lpj_plan=(comm, 4 * 3600.0, 0.3, "pp"),
+                  plan_at=1800.0)
+    post_plan = [p for p in res.series if 1800.0 < p.t <= 4 * 3600.0]
+    final_ret = np.mean([p.retention_rate for p in post_plan[-5:]])
+    mean_alloc = np.mean([p.allocation_rate for p in post_plan])
+    return float(final_ret), float(mean_alloc), res.manual_preemptions
+
+
+def run() -> list[tuple]:
+    rows = []
+    t0 = time.perf_counter()
+    ret_a, alloc_a, pre_a = _sim(reserve=True, use_jct=True)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("queue_arnold_final_retention", dt, round(ret_a, 3)))
+    rows.append(("queue_arnold_mean_allocation", 0.0, round(alloc_a, 3)))
+    rows.append(("queue_arnold_preempted_at_lpj", 0.0, pre_a))
+
+    ret_b, alloc_b, pre_b = _sim(reserve=False, use_jct=True)
+    rows.append(("queue_noreserve_final_retention", 0.0, round(ret_b, 3)))
+    rows.append(("queue_noreserve_preempted_at_lpj", 0.0, pre_b))
+
+    ret_c, alloc_c, _ = _sim(reserve=True, use_jct=False)
+    rows.append(("queue_nojct_mean_allocation", 0.0, round(alloc_c, 3)))
+
+    # paper-shape checks (Fig. 14): reservation drains the planned zone;
+    # JCT backfill raises utilization of the reserved zone
+    rows.append(("paper_claim_retention_drains_ok", 0.0,
+                 int(ret_a < ret_b)))
+    rows.append(("paper_claim_jct_raises_allocation_ok", 0.0,
+                 int(alloc_a >= alloc_c - 1e-9)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,42 @@
+"""Render EXPERIMENTS.md §Dry-run table from reports/dryrun.jsonl."""
+
+import json
+import pathlib
+
+REPORTS = pathlib.Path(__file__).resolve().parent.parent / "reports"
+
+
+def main():
+    recs = [json.loads(l) for l in open(REPORTS / "dryrun.jsonl") if l.strip()]
+    cells = {}
+    for r in recs:
+        cells[(r["arch"], r["shape"], r["mesh"])] = r  # keep last on re-runs
+    recs = list(cells.values())
+    archs = sorted({r["arch"] for r in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    print("| arch | shape | single: status / peak GiB/dev / compile s | "
+          "multi: status / peak GiB/dev / compile s |")
+    print("|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            row = []
+            for mesh in ("single", "multi"):
+                r = cells.get((a, s, mesh))
+                if r is None:
+                    row.append("(pending)")
+                elif r["status"] == "ok":
+                    peak = (r["memory"]["peak_bytes_per_device"] or 0) / 2**30
+                    row.append(f"ok / {peak:.2f} / {r['compile_s']:.0f}")
+                elif r["status"].startswith("skipped"):
+                    row.append("skip (full-attn @512k)")
+                else:
+                    row.append("FAILED")
+            print(f"| {a} | {s} | {row[0]} | {row[1]} |")
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if str(r["status"]).startswith("skipped"))
+    n_fail = sum(1 for r in recs if str(r["status"]).startswith("FAILED"))
+    print(f"\nok={n_ok} skipped={n_skip} failed={n_fail} total={len(recs)}")
+
+
+if __name__ == "__main__":
+    main()

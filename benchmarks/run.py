@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §5).
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run as:
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run bench_e2e  # one
+"""
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_breakdown,
+    bench_comm,
+    bench_e2e,
+    bench_jct,
+    bench_latency,
+    bench_queue,
+    bench_spread,
+    bench_volume,
+    roofline_report,
+)
+
+ALL = {
+    "bench_volume": bench_volume,      # Appendix C (2 GB / 30 MB claim)
+    "bench_comm": bench_comm,          # Figure 4 (BusBw model)
+    "bench_spread": bench_spread,      # Figure 7 / Table 1
+    "bench_latency": bench_latency,    # Figure 8 (scalability)
+    "bench_e2e": bench_e2e,            # Figures 5 + 9 (simulated E2E)
+    "bench_queue": bench_queue,        # Figure 14 / Appendix H
+    "bench_jct": bench_jct,            # Figure 13 / Appendix G
+    "bench_breakdown": bench_breakdown,  # Figure 10 / Appendix I
+    "roofline_report": roofline_report,  # §Roofline table from the dry-run
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = ALL[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}_FAILED,0,{type(e).__name__}")
+            continue
+        wall = (time.perf_counter() - t0) * 1e6
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"{name}_total,{wall:.0f},ok")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

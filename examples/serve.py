@@ -1,0 +1,48 @@
+"""Batched serving demo: prefill-free batched decode with KV cache on a
+reduced glm4-9b (GQA kv=2), greedy sampling, measuring tokens/sec.
+
+Run:  PYTHONPATH=src python examples/serve.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import ModelOptions, build_model
+
+
+def main():
+    cfg = get_config("glm4-9b").reduced()
+    model = build_model(cfg, ModelOptions(compute_dtype="float32", remat=False))
+    params = model.init(jax.random.PRNGKey(0))
+
+    batch, max_len, gen = 8, 96, 64
+    cache = model.init_cache(batch, max_len)
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # warm the compile, then generate greedily from a fixed prompt token
+    tokens = jnp.full((batch, 1), 7, jnp.int32)
+    logits, cache = step(params, cache, tokens)
+    tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    t0 = time.perf_counter()
+    out = [tokens]
+    for _ in range(gen - 1):
+        logits, cache = step(params, cache, tokens)
+        tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tokens)
+    jax.block_until_ready(tokens)
+    dt = time.perf_counter() - t0
+
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"generated {batch}x{gen-1} tokens in {dt:.2f}s "
+          f"({batch*(gen-1)/dt:.0f} tok/s on CPU)")
+    print("first sequence:", seqs[0, :24].tolist())
+    assert bool(jnp.all(seqs >= 0)) and bool(jnp.all(seqs < cfg.vocab))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

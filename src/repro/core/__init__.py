@@ -1,0 +1,41 @@
+"""Arnold: topology-aware communication alignment for LLM pre-training.
+
+The paper's primary contribution, as a composable library:
+
+* :mod:`repro.core.topology`     -- CLOS cluster model (minipods / racks / nodes)
+* :mod:`repro.core.comm_matrix`  -- workload representation (Eq. 1, App. C)
+* :mod:`repro.core.spread`       -- spread metric + Eq. 2 objective
+* :mod:`repro.core.mip`          -- the MILP scheduler (Eq. 4-10)
+* :mod:`repro.core.baselines`    -- best-fit / random-fit / gpu-packing / topo-aware
+* :mod:`repro.core.affinity`     -- characterization DB -> (alpha, beta)
+* :mod:`repro.core.queue`        -- Algorithm 1 reservation policy
+* :mod:`repro.core.jct`          -- GBM job-completion-time predictor
+* :mod:`repro.core.simulator`    -- trace-driven simulator
+* :mod:`repro.core.netmodel`     -- calibrated BusBw / step-time model
+* :mod:`repro.core.failures`     -- backup-node repair, straggler mitigation
+* :mod:`repro.core.rank_assign`  -- placement -> device permutation
+"""
+
+from repro.core.affinity import CharacterizationDB, CharRecord
+from repro.core.baselines import ALL_BASELINES, best_fit, gpu_packing, random_fit, topo_aware
+from repro.core.characterize import characterize, characterize_sweep
+from repro.core.comm_matrix import (
+    CommMatrix,
+    JobSpec,
+    ModelSpec,
+    build_comm_matrix,
+    dp_volume_bytes,
+    ep_volume_bytes,
+    pp_volume_bytes,
+)
+from repro.core.failures import FailureManager
+from repro.core.jct import JCTPredictor, synthetic_trace
+from repro.core.mip import Infeasible, MipResult, schedule_mip
+from repro.core.netmodel import NetModel, NetModelConfig, simulate_step_time
+from repro.core.queue import Job, QueuePolicy
+from repro.core.rank_assign import device_permutation, logical_to_physical_gpus
+from repro.core.simulator import TraceSimulator, poisson_trace, throughput_of_placement
+from repro.core.spread import Placement, max_spreads, weighted_spread
+from repro.core.topology import Cluster, Minipod, Node
+
+__all__ = [name for name in dir() if not name.startswith("_")]

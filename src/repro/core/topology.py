@@ -1,0 +1,123 @@
+"""Physical data-center topology model (paper §2, Fig. 2b).
+
+The cluster is a three-tier CLOS: nodes -> leaf switches (s0, one per rack)
+-> spine switches (s1, one *minipod* per spine group) -> core switches.
+The paper's characterization (§4) shows training performance is dominated by
+the *minipod spread* of communication groups and is insensitive to
+intra-minipod topology (<= 0.3% variation), so the scheduling topology is
+modeled at minipod granularity, with racks retained for rank ordering.
+
+On the TPU target the "minipod" maps to an ICI pod / contiguous device block
+(see DESIGN.md §3); the same abstractions drive the mesh device permutation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+GPUS_PER_NODE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """A compute node: 8 accelerators under one NIC/leaf switch."""
+
+    node_id: int
+    minipod: int
+    rack: int
+    gpus: int = GPUS_PER_NODE
+
+
+@dataclasses.dataclass
+class Minipod:
+    """Nodes under one spine switch (s1)."""
+
+    pod_id: int
+    node_ids: list[int]
+
+    @property
+    def capacity(self) -> int:
+        return len(self.node_ids)
+
+
+class Cluster:
+    """Three-tier CLOS cluster at minipod granularity.
+
+    Tracks free/busy nodes; scheduling algorithms allocate from here.
+    """
+
+    def __init__(self, nodes_per_minipod: Sequence[int], nodes_per_rack: int = 8):
+        self.minipods: list[Minipod] = []
+        self.nodes: dict[int, Node] = {}
+        nid = 0
+        for pod_id, n in enumerate(nodes_per_minipod):
+            ids = []
+            for i in range(n):
+                rack = i // nodes_per_rack
+                self.nodes[nid] = Node(node_id=nid, minipod=pod_id, rack=rack)
+                ids.append(nid)
+                nid += 1
+            self.minipods.append(Minipod(pod_id=pod_id, node_ids=ids))
+        self._free: set[int] = set(self.nodes)
+
+    # ------------------------------------------------------------------ state
+    @property
+    def n_minipods(self) -> int:
+        return len(self.minipods)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def free_in_minipod(self, pod_id: int) -> list[int]:
+        return sorted(n for n in self.minipods[pod_id].node_ids if n in self._free)
+
+    def free_capacities(self) -> list[int]:
+        return [len(self.free_in_minipod(p.pod_id)) for p in self.minipods]
+
+    def is_free(self, node_id: int) -> bool:
+        return node_id in self._free
+
+    # ------------------------------------------------------------- transitions
+    def allocate(self, node_ids: Iterable[int]) -> None:
+        ids = list(node_ids)
+        missing = [n for n in ids if n not in self._free]
+        if missing:
+            raise ValueError(f"nodes not free: {missing}")
+        self._free -= set(ids)
+
+    def release(self, node_ids: Iterable[int]) -> None:
+        for n in node_ids:
+            if n not in self.nodes:
+                raise ValueError(f"unknown node {n}")
+            self._free.add(n)
+
+    def snapshot_free(self) -> set[int]:
+        return set(self._free)
+
+    # ---------------------------------------------------------------- factories
+    @classmethod
+    def uniform(cls, n_minipods: int, nodes_per_minipod: int, **kw) -> "Cluster":
+        return cls([nodes_per_minipod] * n_minipods, **kw)
+
+    @classmethod
+    def paper_setting(cls, which: str) -> "Cluster":
+        """Benchmark topologies from Table 1 (subsets of the production cluster).
+
+        ``{x}, {y}`` = x minipods, y nodes total.  Nodes are spread as evenly
+        as possible across minipods (the paper does not publish the per-pod
+        distribution of its subsets).
+        """
+        spec = {"i": (3, 18), "ii": (5, 438), "iii": (11, 1019)}[which]
+        pods, total = spec
+        base, rem = divmod(total, pods)
+        return cls([base + (1 if i < rem else 0) for i in range(pods)])
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        caps = self.free_capacities()
+        return f"Cluster(minipods={self.n_minipods}, nodes={self.n_nodes}, free={caps})"

@@ -1,0 +1,3 @@
+from repro.data.pipeline import MarkovLM, Prefetcher, SyntheticDataset
+
+__all__ = ["MarkovLM", "Prefetcher", "SyntheticDataset"]

@@ -1,0 +1,106 @@
+"""Flash attention Pallas TPU kernel: causal GQA with online softmax.
+
+TPU adaptation (DESIGN.md §3): blocks are sized for VMEM and MXU alignment
+-- q/k tiles of (block_q x head_dim) and (block_k x head_dim) with both
+block sizes multiples of 128 at production shapes, fp32 accumulators held
+in VMEM scratch across the contraction (kv) grid dimension, which is the
+innermost ("arbitrary") axis so the (m, l, acc) carry is legal.
+
+Grid: (batch, q_heads, sq/block_q, skv/block_k); GQA maps q-head h to
+kv-head h // (hq/hkv) in the k/v index_maps -- no repeated-KV
+materialization in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               causal: bool, sm_scale: float, block_q: int, block_k: int,
+               n_kv_blocks: int, skv: int, sq: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    valid = k_pos < skv
+    if causal:
+        # causal offset: query i attends to keys <= i + (skv - sq)
+        valid = valid & (q_pos + (skv - sq) >= k_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (b, hq, sq, hd); k/v: (b, hkv, skv, hd) -> (b, hq, sq, hd)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    n_q_blocks = pl.cdiv(sq, block_q)
+    n_kv_blocks = pl.cdiv(skv, block_k)
+    sm_scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, sm_scale=sm_scale, block_q=block_q,
+        block_k=block_k, n_kv_blocks=n_kv_blocks, skv=skv, sq=sq,
+    )
+    grid = (b, hq, n_q_blocks, n_kv_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),       # l: running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc: fp32 accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas kernel: one pass over rows, fp32 statistics in
+registers, (block_rows x d) VMEM tiles.  Fuses the variance reduction with
+the scale multiply so the activation is read from HBM exactly once."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)               # (block_rows, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., d) -> same shape; rows processed in VMEM tiles."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = int(np.prod(orig_shape[:-1])) if orig_shape[:-1] else 1
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,250 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = collective_bytes / (chips * links * 50 GB/s)
+
+``cost_analysis()`` provides HLO FLOPs / bytes; collective bytes are parsed
+from the compiled HLO text by summing the result-buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(documented convention: result size ~ bytes landing on each participant for
+ring algorithms).  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives
+the useful-compute ratio that catches remat / dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+TPU_PEAK_FLOPS = 197e12    # bf16, per chip
+TPU_HBM_BW = 819e9         # bytes/s per chip
+TPU_ICI_LINK_BW = 50e9     # bytes/s per link
+ICI_LINKS_PER_CHIP = 4     # v5e 2D torus: 4 links
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+#: result-defining HLO line, e.g. ``%ag = bf16[2,4096,128]{2,1,0} all-gather(...)``
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?(\w+)\[([\d,]*)\][^a-zA-Z]*\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind over the whole module.
+
+    Async pairs are counted at the ``-done`` op (whose result is the full
+    gathered/reduced buffer); ``-start`` lines are skipped so nothing is
+    double-counted.  NOTE: ops inside ``while`` bodies are counted once --
+    callers must pass an HLO with unrolled layer loops (the dry-run's
+    analysis compile) for trip-count-true totals.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-start" in line:
+            continue  # async start: counted at the matching -done
+        m = _OP_RE.search(line)
+        kind = None
+        total = 0
+        if m:
+            kind = m.group(3)
+            total = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                total = sum(
+                    _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(mt.group(1))
+                )
+        if kind is None:
+            continue
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def inner_scan_flops(cfg, shape_spec) -> float:
+    """Closed-form GLOBAL flops of recurrences that remain inside ``while``
+    bodies even in the unrolled analysis compile (xLSTM time scans, Mamba2
+    chunk scans) and are therefore invisible to ``cost_analysis``.
+
+    Forward-only; the caller multiplies by 3 for train (bwd ~ 2x fwd).
+    """
+    if cfg.family not in ("ssm", "hybrid") or shape_spec.kind == "decode":
+        return 0.0
+    b = shape_spec.global_batch
+    s = shape_spec.seq_len
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = cfg.n_heads
+        dh = d_in // H
+        n_units = cfg.n_layers // cfg.slstm_every
+        n_m = n_units * (cfg.slstm_every - 1)
+        n_s = n_units
+        mlstm = 6.0 * b * s * n_m * H * dh * dh      # C update + C.q per step
+        slstm = 8.0 * b * s * n_s * H * dh * dh      # recurrent gate matmuls
+        return mlstm + slstm
+    # hybrid (mamba2 chunk scan, chunk=128)
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or (d_in // 64)
+    P = d_in // H
+    N = cfg.ssm_state
+    cs = 128
+    n_chunks = max(1, s // cs)
+    per_chunk = 2.0 * cs * cs * (N + P) + 4.0 * cs * P * N
+    return float(b * H * n_chunks * per_chunk * cfg.n_layers)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: dict
+    model_flops: float
+    analytic_bytes: float = 0.0  # modeled true HBM traffic (global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    memory_s_xla_upper: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.hlo_flops / (self.chips * TPU_PEAK_FLOPS)
+        self.memory_s_xla_upper = self.hlo_bytes / (self.chips * TPU_HBM_BW)
+        # XLA "bytes accessed" counts every HLO op's operands with CPU-level
+        # fusion, inflating HBM traffic by >10x vs a TPU compile; the
+        # analytic model (analytic_hbm_bytes) is the memory term, the XLA
+        # number is kept as an upper bound.  Falls back to XLA if no model.
+        mem_bytes = self.analytic_bytes or self.hlo_bytes
+        self.memory_s = mem_bytes / (self.chips * TPU_HBM_BW)
+        self.collective_s = self.collective_bytes / (
+            self.chips * ICI_LINKS_PER_CHIP * TPU_ICI_LINK_BW
+        )
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: fraction of compiled compute that is
+        'useful' model math (catches remat/redundancy waste)."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bound: 1.0 = perfectly compute-bound (at roofline),
+        lower = dominated by memory or collectives."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives, "model_flops": self.model_flops,
+            "analytic_bytes": self.analytic_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_s_xla_upper": self.memory_s_xla_upper,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analytic_hbm_bytes(cfg, shape_spec, *, microbatches: int = 1,
+                       attn_impl: str = "xla", remat: bool = True,
+                       kv_cache_bytes: float = 0.0) -> float:
+    """Modeled GLOBAL HBM traffic per step (bytes), summed over chips.
+
+    Post-fusion accounting with explicit constants (documented here, used by
+    EXPERIMENTS.md §Roofline):
+
+    * weights: read once per fwd / recompute / bwd pass per microbatch
+      (ZeRO-3 gathers land in HBM first), + fp32 optimizer read-modify-write;
+    * activations: ~8 materialized (b, s, d) tensors per layer per pass
+      (norm outs, attn in/out, mlp in/out, residuals) -- fused elementwise
+      chains count once;
+    * attention: "xla" materializes fp32 (b, h, s, s) scores (write + read,
+      softmax in-register); "chunked"/flash keeps them in VMEM => 0 extra;
+    * logits: (b, s, V) bf16 write+read (+ fp32 softmax pass in the loss);
+    * decode: weights once + KV cache read + O(1) writes.
+
+    Train multiplies fwd traffic by 3 (fwd + remat recompute + bwd) when
+    remat is on, else 2.
+    """
+    P = cfg.param_count()
+    bpe = 2  # bf16
+    b = shape_spec.global_batch
+    s = shape_spec.seq_len
+    d = cfg.d_model
+
+    if shape_spec.kind == "decode":
+        # one token: all (active) weights stream once; KV cache streams once.
+        weights = cfg.active_param_count() * bpe
+        cache = kv_cache_bytes
+        act = 20 * b * cfg.n_layers * d * bpe  # per-layer vectors, negligible
+        return float(weights + cache + act)
+
+    passes = 1 if shape_spec.kind == "prefill" else (3 if remat else 2)
+    n_layers = cfg.n_layers + (cfg.n_encoder_layers or 0)
+    weights = passes * microbatches * P * bpe
+    acts = passes * 8 * n_layers * b * s * d * bpe
+    attn = 0.0
+    if attn_impl == "xla" and cfg.family not in ("ssm",):
+        n_attn = n_layers if cfg.family != "hybrid" else max(
+            1, cfg.n_layers // max(cfg.attn_every, 1))
+        attn = passes * 2 * n_attn * b * cfg.n_heads * s * s * 4
+    logits = 3 * b * s * cfg.vocab * bpe
+    opt = 0.0
+    if shape_spec.kind == "train":
+        opt = 4 * P * 4  # m, v read+write in fp32 (+params RMW folded in)
+    return float(weights + acts + attn + logits + opt)
+
+
+def model_flops_for(cfg, shape_spec) -> float:
+    """MODEL_FLOPS: 6*N*D for a train step (fwd+bwd), 2*N*D for forward-only
+    prefill, 2*N_active per token for decode.  N = active params."""
+    n = cfg.active_param_count()
+    if shape_spec.kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n * tokens
+    if shape_spec.kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape_spec.global_batch

@@ -1,0 +1,129 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Wires the whole stack together: config -> model -> synthetic data pipeline ->
+AdamW (+schedule) -> fault-tolerant Trainer with checkpoint-restart, and
+optionally an Arnold-scheduled mesh (``--devices N --mesh-shape dxm`` builds
+an N-fake-device cluster, runs the MILP placement, permutes the mesh, and
+trains under pjit).
+"""
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (default: reduced)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake host devices for a sharded run (0 = single)")
+    ap.add_argument("--mesh-shape", default="2x4",
+                    help="dataxmodel for the sharded run")
+    ap.add_argument("--arnold", action="store_true",
+                    help="order mesh devices by the Arnold MILP placement")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    import jax
+    from repro.configs import get_config
+    from repro.data import SyntheticDataset
+    from repro.models import ModelOptions, build_model
+    from repro.models.whisper import N_FRAMES
+    from repro.optim import AdamWConfig, get_schedule
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    opts = ModelOptions(
+        compute_dtype="float32" if not args.devices else "bfloat16",
+        remat=bool(args.full),
+    )
+    model = build_model(cfg, opts)
+
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = ((args.global_batch, cfg.n_patches, cfg.d_model), "float32")
+    if cfg.family == "audio":
+        extra["frames"] = ((args.global_batch, 24, cfg.d_model), "float32")
+    ds = SyntheticDataset(cfg.vocab, args.seq_len, args.global_batch,
+                          seed=args.seed, extra_specs=extra)
+    schedule = get_schedule(cfg.lr_schedule, args.lr, warmup_steps=max(1, args.steps // 20),
+                            total_steps=args.steps)
+    opt = AdamWConfig(lr=schedule)
+
+    trainer = Trainer(
+        model, ds, opt, ckpt_dir=args.ckpt_dir,
+        cfg=TrainerConfig(
+            total_steps=args.steps, ckpt_every=args.ckpt_every,
+            log_every=args.log_every, microbatches=args.microbatches,
+            seed=args.seed,
+        ),
+        on_step=lambda h: print(
+            f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+            f"gnorm {h['grad_norm']:.3f}  {h['step_time']*1e3:.0f} ms",
+            flush=True,
+        ),
+    )
+
+    if args.devices:
+        # sharded run: optionally Arnold-ordered mesh
+        from repro.core import (
+            CharacterizationDB, Cluster, JobSpec, ModelSpec, build_comm_matrix,
+            schedule_mip,
+        )
+        from repro.launch.mesh import make_arnold_mesh, mesh_group_spread
+        from repro.parallel import sharding as shd
+        from repro.train import make_train_step
+
+        d, m = (int(x) for x in args.mesh_shape.split("x"))
+        assert d * m <= args.devices
+        if args.arnold:
+            nodes = args.devices // 8
+            cluster = Cluster.uniform(max(2, nodes // 4), 4)
+            mspec = ModelSpec(name=cfg.name, hidden=cfg.d_model,
+                              layers=cfg.n_layers, vocab=cfg.vocab,
+                              seq_len=args.seq_len, global_batch=args.global_batch,
+                              d_ff=cfg.d_ff or 4 * cfg.d_model)
+            job = JobSpec(n_gpus=d * m, tp=min(m, 8), pp=1, model=mspec)
+            comm = build_comm_matrix(job)
+            alpha, beta, unit = CharacterizationDB().affinity_for(comm)
+            res = schedule_mip(comm, cluster, alpha=alpha, unit=unit)
+            mesh = make_arnold_mesh(res.placement, tp=job.tp, shape=(d, m),
+                                    axes=("data", "model"))
+            print(f"Arnold placement: pods={res.n_pods_used} "
+                  f"spread(data axis)={mesh_group_spread(mesh, 'data', 32)}")
+        else:
+            mesh = jax.make_mesh((d, m), ("data", "model"))
+        with shd.activate(mesh):
+            trainer.step_fn = make_train_step(
+                model, opt, mesh=mesh, microbatches=args.microbatches
+            )(jax.eval_shape(lambda: {
+                k: jax.numpy.asarray(v) for k, v in ds.batch(0).items()
+            }))
+            history = trainer.run()
+    else:
+        history = trainer.run()
+
+    losses = trainer.losses()
+    print(f"done: first logged loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Model zoo: dense GQA transformer, MoE, VLM, xLSTM, Whisper, Zamba2."""
+
+from repro.models.model_zoo import (
+    build_model,
+    decode_input_specs,
+    input_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.models.transformer import DecoderLM, ModelOptions
+from repro.models.whisper import WhisperLM
+from repro.models.xlstm import XLSTMLM
+from repro.models.zamba import ZambaLM
+
+__all__ = [
+    "build_model", "input_specs", "train_input_specs", "prefill_input_specs",
+    "decode_input_specs", "DecoderLM", "ModelOptions", "WhisperLM", "XLSTMLM",
+    "ZambaLM",
+]

@@ -1,0 +1,77 @@
+"""Model registry: ``build_model(cfg)`` dispatch + ShapeDtypeStruct input
+specs for every (arch x shape) dry-run cell.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins with zero device allocation -- ``jax.eval_shape`` over
+``init_cache`` supplies decode-cache structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import DecoderLM, ModelOptions
+from repro.models.whisper import N_FRAMES, WhisperLM
+from repro.models.xlstm import XLSTMLM
+from repro.models.zamba import ZambaLM
+
+
+def build_model(cfg: ArchConfig, opts: ModelOptions | None = None):
+    family = cfg.family
+    if family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, opts)
+    if family == "ssm":
+        return XLSTMLM(cfg, opts)
+    if family == "audio":
+        return WhisperLM(cfg, opts)
+    if family == "hybrid":
+        return ZambaLM(cfg, opts)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec, opts: ModelOptions | None = None):
+    """Batch stand-ins for ``train_step`` / prefill forward."""
+    opts = opts or ModelOptions()
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = _sds((b, cfg.n_patches, cfg.d_model), opts.cdt)
+    if cfg.family == "audio":
+        specs["frames"] = _sds((b, N_FRAMES, cfg.d_model), opts.cdt)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec, opts: ModelOptions | None = None):
+    specs = train_input_specs(cfg, shape, opts)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, opts: ModelOptions | None = None):
+    """(tokens, cache) stand-ins for ``serve_step``: one new token against a
+    KV cache / recurrent state sized for ``shape.seq_len``."""
+    model = build_model(cfg, opts)
+    b = shape.global_batch
+    cache = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, opts: ModelOptions | None = None):
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, opts)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, opts)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape, opts)
+    raise ValueError(shape.kind)

@@ -1,0 +1,253 @@
+"""Whisper-style encoder-decoder ASR backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (b, n_frames, d_model); a single
+linear adapter ("frame_proj") stands in for the conv stack.  Positions are
+sinusoidal for both stacks (the original uses sinusoidal encoder / learned
+decoder positions; learned tables don't extend to the 32k decode shape --
+deviation noted in DESIGN.md).  MLPs are 2-layer GELU as in the original.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.parallel.sharding import lshard
+
+N_FRAMES = 1500  # whisper's 30 s window after the conv stack
+
+
+def _mask_padded(logits, cfg):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(valid[None, None, :], logits, -1e30)
+
+
+def sinusoid_pos(seq_len: int, d_model: int, offset=0):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None] + offset
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model))
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    ki, ko = jax.random.split(key)
+    return {
+        "mlp": {
+            "w_in": L.dense_init(ki, (d_model, d_ff), dtype=dtype),
+            "w_out": L.dense_init(ko, (d_ff, d_model), dtype=dtype),
+        }
+    }
+
+
+def gelu_mlp_fwd(p, x):
+    cd = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["mlp"]["w_in"].astype(cd))
+    h = lshard(h, "batch", "seq", "ffn")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bsf,fd->bsd", h, p["mlp"]["w_out"].astype(cd))
+
+
+class WhisperLM:
+    def __init__(self, cfg: ArchConfig, opts=None):
+        from repro.models.transformer import ModelOptions
+
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+
+    # ------------------------------------------------------------------ init
+    def _init_enc_layer(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        ka, km = jax.random.split(key)
+        return {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, dtype=pdt),
+            "attn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            **init_gelu_mlp(km, cfg.d_model, cfg.d_ff, pdt),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        ka, kx, km = jax.random.split(key, 3)
+        return {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, dtype=pdt),
+            "attn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "xattn": L.init_attention(kx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, dtype=pdt),
+            "xattn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            **init_gelu_mlp(km, cfg.d_model, cfg.d_ff, pdt),
+        }
+
+    def init(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        ke, kd, kemb, kf = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+        dec_keys = jax.random.split(kd, cfg.n_layers)
+        return {
+            "embed": {"tokens": L.dense_init(kemb, (cfg.padded_vocab, cfg.d_model), dtype=pdt)},
+            "frame_proj": L.dense_init(kf, (cfg.d_model, cfg.d_model), dtype=pdt),
+            "enc_layers": jax.vmap(self._init_enc_layer)(enc_keys),
+            "dec_layers": jax.vmap(self._init_dec_layer)(dec_keys),
+            "enc_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            # whisper ties the output head to the token embedding
+        }
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        cfg, cd = self.cfg, self.opts.cdt
+        x = jnp.einsum("bsd,de->bse", frames.astype(cd), params["frame_proj"].astype(cd))
+        x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(cd)[None]
+        x = lshard(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, lp):
+            h = L.attention_fwd(
+                lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps), positions,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=False, use_rope=False,
+            )
+            x = x + h
+            x = x + gelu_mlp_fwd(lp, L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+            return x, None
+
+        if self.opts.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # --------------------------------------------------------------- decoder
+    def _cross_kv(self, lp, enc_out):
+        cfg, cd = self.cfg, self.opts.cdt
+        b, se, _ = enc_out.shape
+        hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+        k = jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wk"].astype(cd)).reshape(b, se, K, hd)
+        v = jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wv"].astype(cd)).reshape(b, se, K, hd)
+        return k, v
+
+    def decode_stack(self, params, tokens, enc_out):
+        cfg, cd = self.cfg, self.opts.cdt
+        x = params["embed"]["tokens"].astype(cd)[tokens]
+        x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(cd)[None]
+        x = lshard(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, lp):
+            h = L.attention_fwd(
+                lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps), positions,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=True, use_rope=False,
+                attn_impl=self.opts.attn_impl, chunk=self.opts.attn_chunk,
+            )
+            x = x + h
+            kv = self._cross_kv(lp, enc_out)
+            h = L.attention_fwd(
+                lp["xattn"], L.rmsnorm(lp["xattn_norm"], x, cfg.norm_eps), positions,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=False, use_rope=False,
+                kv_override=kv,
+            )
+            x = x + h
+            x = x + gelu_mlp_fwd(lp, L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+            return x, None
+
+        if self.opts.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["tokens"].T.astype(cd))
+        return _mask_padded(logits, cfg)
+
+    def forward(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        logits = self.decode_stack(params, batch["tokens"], enc_out)
+        return lshard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+        return ce, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, n_frames: int = N_FRAMES):
+        cfg = self.cfg
+        cd = self.opts.cdt
+        hd, K, nl = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_layers
+        kv = L.init_kv_cache(batch, max_len, K, hd, dtype=cd)
+        return {
+            "kv": jax.tree.map(lambda a: jnp.broadcast_to(a, (nl,) + a.shape), kv),
+            "cross_k": jnp.zeros((nl, batch, n_frames, K, hd), cd),
+            "cross_v": jnp.zeros((nl, batch, n_frames, K, hd), cd),
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self) -> dict:
+        kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        cross = ("layers", "batch", None, "kv_heads", "head_dim")
+        return {"kv": {"k": kv, "v": kv}, "cross_k": cross, "cross_v": cross,
+                "index": ()}
+
+    def prefill_cross(self, params, cache, frames):
+        """Run the encoder once and fill the cross-attention KV cache."""
+        enc_out = self.encode(params, frames)
+
+        def per_layer(lp):
+            k, v = self._cross_kv(lp, enc_out)
+            return k, v
+
+        ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+        return {**cache, "cross_k": ks.astype(cache["cross_k"].dtype),
+                "cross_v": vs.astype(cache["cross_v"].dtype)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg, cd = self.cfg, self.opts.cdt
+        x = params["embed"]["tokens"].astype(cd)[tokens]
+        index = cache["index"]
+        x = x + sinusoid_pos(1, cfg.d_model, offset=index).astype(cd)[None]
+
+        def body(x, inp):
+            lp, kvc, ck, cv = inp
+            h, kvc = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps), kvc, index,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, use_rope=False,
+            )
+            x = x + h
+            # cross attention over the (precomputed) encoder KV
+            b = x.shape[0]
+            xn = L.rmsnorm(lp["xattn_norm"], x, cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", xn, lp["xattn"]["wq"].astype(cd)).reshape(
+                b, 1, cfg.n_heads, cfg.resolved_head_dim
+            )
+            k = L._repeat_kv(ck.astype(cd), cfg.n_heads // cfg.n_kv_heads)
+            v = L._repeat_kv(cv.astype(cd), cfg.n_heads // cfg.n_kv_heads)
+            mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+            h = L.attention_scores(q, k, v, mask, compute_dtype=cd).reshape(
+                b, 1, cfg.n_heads * cfg.resolved_head_dim
+            )
+            x = x + jnp.einsum("bsh,hd->bsd", h, lp["xattn"]["wo"].astype(cd))
+            x = x + gelu_mlp_fwd(lp, L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+            return x, kvc
+
+        x, kv = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["kv"], cache["cross_k"], cache["cross_v"])
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_padded(
+            jnp.einsum("bsd,dv->bsv", x, params["embed"]["tokens"].T.astype(cd)), cfg)
+        return logits, {**cache, "kv": kv, "index": index + 1}

@@ -1,0 +1,344 @@
+"""xLSTM LM: mLSTM (matrix memory, parallelizable) + sLSTM (scalar memory,
+strictly recurrent) blocks in a repeating unit [mLSTM x (k-1), sLSTM x 1]
+(arXiv:2405.04517).
+
+The gating math is the paper's stabilized exponential form (max-stabilizer
+``m_t``).  Block plumbing is simplified to a uniform pre-up-projection
+structure (see DESIGN.md §4); recurrences are ``lax.scan`` over time --
+decode state is O(1) in sequence length, so this arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.parallel.sharding import lshard
+
+
+def _proj_init(key, shape, dtype):
+    return L.dense_init(key, shape, dtype=dtype)
+
+
+def _mask_padded_vocab(logits, cfg):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(valid[None, None, :], logits, -1e30)
+
+
+def segmented_scan(f, init, xs, seg_len: int = 128):
+    """lax.scan with gradient checkpointing every ``seg_len`` steps: AD saves
+    only segment-boundary carries (O(s/seg) instead of O(s) carry copies --
+    essential for the (b,H,dh,dh) mLSTM matrix memory at seq 4k+)."""
+    s = jax.tree.leaves(xs)[0].shape[0]
+    if seg_len >= s or s % seg_len:
+        return jax.lax.scan(f, init, xs)
+    n_seg = s // seg_len
+    xs_seg = jax.tree.map(lambda a: a.reshape((n_seg, seg_len) + a.shape[1:]), xs)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def seg_body(carry, xseg):
+        return jax.lax.scan(f, carry, xseg)
+
+    carry, ys = jax.lax.scan(seg_body, init, xs_seg)
+    ys = jax.tree.map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------- mLSTM cell
+def init_mlstm(key, d_model, d_in, n_heads, dtype):
+    ks = jax.random.split(key, 8)
+    dh = d_in // n_heads
+    return {
+        "ssm": {
+            "w_in": _proj_init(ks[0], (d_model, 2 * d_in), dtype),   # x branch + gate z
+            "w_q": _proj_init(ks[1], (d_in, d_in), dtype),
+            "w_k": _proj_init(ks[2], (d_in, d_in), dtype),
+            "w_v": _proj_init(ks[3], (d_in, d_in), dtype),
+            "w_i": _proj_init(ks[4], (d_in, n_heads), dtype),
+            "w_f": _proj_init(ks[5], (d_in, n_heads), dtype),
+            "w_out": _proj_init(ks[6], (d_in, d_model), dtype),
+            "f_bias": jnp.full((n_heads,), 3.0, dtype),  # open forget gates at init
+        },
+        "norm": L.init_rmsnorm(d_model, dtype),
+    }
+
+
+def mlstm_state(batch, n_heads, dh, dtype=jnp.float32):
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), dtype),
+        "n": jnp.zeros((batch, n_heads, dh), dtype),
+        "m": jnp.full((batch, n_heads), -1e30, dtype),
+    }
+
+
+def _mlstm_step(state, qkv_ifg):
+    """One stabilized mLSTM step.  q,k,v: (b,H,dh); i,f: (b,H) raw logits."""
+    q, k, v, i_raw, f_raw = qkv_ifg
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(f_raw)                  # sigmoid forget gate
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )                                                  # (b,H,dh,dh): v outer k
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), jnp.exp(-m_new)
+    )
+    h = jnp.einsum("bhij,bhj->bhi", C_new, q) / denom[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_fwd(params, x, state, eps):
+    """x: (b, s, d) -> (y, new_state); scan over time."""
+    p = params["ssm"]
+    cd = x.dtype
+    b, s, d = x.shape
+    H = p["w_i"].shape[-1]
+    xn = L.rmsnorm(params["norm"], x, eps)
+    xz = jnp.einsum("bsd,de->bse", xn, p["w_in"].astype(cd))
+    xm, z = jnp.split(xz, 2, axis=-1)
+    d_in = xm.shape[-1]
+    dh = d_in // H
+    q = jnp.einsum("bse,ef->bsf", xm, p["w_q"].astype(cd)).reshape(b, s, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xm, p["w_k"].astype(cd)).reshape(b, s, H, dh) / np.sqrt(dh)
+    v = jnp.einsum("bse,ef->bsf", xm, p["w_v"].astype(cd)).reshape(b, s, H, dh)
+    i_raw = jnp.einsum("bse,eh->bsh", xm, p["w_i"].astype(cd)).astype(jnp.float32)
+    f_raw = (
+        jnp.einsum("bse,eh->bsh", xm, p["w_f"].astype(cd)).astype(jnp.float32)
+        + p["f_bias"].astype(jnp.float32)
+    )
+    q = lshard(q, "batch", "seq", "heads", None)
+    k = lshard(k, "batch", "seq", "heads", None)
+    v = lshard(v, "batch", "seq", "heads", None)
+
+    def step(st, inp):
+        st, h = _mlstm_step(st, inp)
+        return st, h
+
+    xs = (
+        q.swapaxes(0, 1).astype(jnp.float32),
+        k.swapaxes(0, 1).astype(jnp.float32),
+        v.swapaxes(0, 1).astype(jnp.float32),
+        i_raw.swapaxes(0, 1),
+        f_raw.swapaxes(0, 1),
+    )
+    state, hs = segmented_scan(step, state, xs)         # hs: (s, b, H, dh)
+    h = hs.swapaxes(0, 1).reshape(b, s, d_in).astype(cd)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_out"].astype(cd))
+    return y, state
+
+
+# ---------------------------------------------------------------- sLSTM cell
+def init_slstm(key, d_model, d_in, n_heads, dtype):
+    ks = jax.random.split(key, 7)
+    dh = d_in // n_heads
+    return {
+        "ssm": {
+            "w_in": _proj_init(ks[0], (d_model, d_in), dtype),
+            "w_gates": _proj_init(ks[1], (d_in, 4 * d_in), dtype),     # i,f,z,o
+            "r_gates": _proj_init(ks[2], (n_heads, dh, 4 * dh), dtype),  # per-head recurrent
+            "w_out": _proj_init(ks[3], (d_in, d_model), dtype),
+            "f_bias": jnp.full((d_in,), 3.0, dtype),
+        },
+        "norm": L.init_rmsnorm(d_model, dtype),
+    }
+
+
+def slstm_state(batch, n_heads, dh, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((batch, n_heads, dh), dtype),
+        "n": jnp.ones((batch, n_heads, dh), dtype),
+        "m": jnp.zeros((batch, n_heads, dh), dtype),
+        "h": jnp.zeros((batch, n_heads, dh), dtype),
+    }
+
+
+def _slstm_step(p, state, xg, H, dh):
+    """xg: (b, 4*d_in) pre-activation gates from the input path."""
+    c, n, m, h_prev = state["c"], state["n"], state["m"], state["h"]
+    b = xg.shape[0]
+    rec = jnp.einsum("bhd,hdg->bhg", h_prev, p["r_gates"].astype(h_prev.dtype))
+    gates = xg.reshape(b, H, 4 * dh) + rec
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_raw)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_fwd(params, x, state, eps):
+    p = params["ssm"]
+    cd = x.dtype
+    b, s, d = x.shape
+    H, dh, _ = p["r_gates"].shape
+    xn = L.rmsnorm(params["norm"], x, eps)
+    xi = jnp.einsum("bsd,de->bse", xn, p["w_in"].astype(cd))
+    xg = jnp.einsum("bse,eg->bsg", xi, p["w_gates"].astype(cd))
+    # only the f-gate block receives the (open-at-init) bias
+    d_in = H * dh
+    bias = jnp.zeros((4 * d_in,), cd).at[d_in : 2 * d_in].set(p["f_bias"].astype(cd))
+    xg = xg + bias
+
+    def step(st, xg_t):
+        st = _slstm_step(p, st, xg_t, H, dh)
+        return st, st["h"]
+
+    state, hs = segmented_scan(step, state, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, s, d_in).astype(cd)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_out"].astype(cd))
+    return y, state
+
+
+# ------------------------------------------------------------------ full LM
+class XLSTMLM:
+    """Repeating unit of (slstm_every-1) mLSTM blocks + 1 sLSTM block,
+    scanned over units."""
+
+    def __init__(self, cfg: ArchConfig, opts=None):
+        from repro.models.transformer import ModelOptions
+
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+        if cfg.n_layers % cfg.slstm_every:
+            raise ValueError("n_layers must be divisible by slstm_every")
+        self.n_units = cfg.n_layers // cfg.slstm_every
+        self.m_per_unit = cfg.slstm_every - 1
+        self.d_in = cfg.ssm_expand * cfg.d_model
+
+    @property
+    def dh(self):
+        return self.d_in // self.cfg.n_heads
+
+    def _init_unit(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        ks = jax.random.split(key, self.m_per_unit + 1)
+        m_params = jax.vmap(
+            lambda k: init_mlstm(k, cfg.d_model, self.d_in, cfg.n_heads, pdt)
+        )(ks[: self.m_per_unit])
+        s_params = init_slstm(ks[-1], cfg.d_model, self.d_in, cfg.n_heads, pdt)
+        return {"mlstm": m_params, "slstm": s_params}
+
+    def init(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        k_emb, k_units, k_head = jax.random.split(key, 3)
+        unit_keys = jax.random.split(k_units, self.n_units)
+        return {
+            "embed": {"tokens": L.dense_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype=pdt)},
+            "units": jax.vmap(self._init_unit)(unit_keys),
+            "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype=pdt),
+        }
+
+    def _zero_states(self, batch):
+        cfg = self.cfg
+        m_st = mlstm_state(batch, cfg.n_heads, self.dh)
+        s_st = slstm_state(batch, cfg.n_heads, self.dh)
+        stack_m = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_units, self.m_per_unit) + a.shape), m_st
+        )
+        stack_s = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_units,) + a.shape), s_st
+        )
+        return {"mlstm": stack_m, "slstm": stack_s}
+
+    def _unit_fwd(self, up, x, m_states, s_state):
+        cfg = self.cfg
+
+        def m_body(x, inp):
+            lp, st = inp
+            y, st = mlstm_fwd(lp, x, st, cfg.norm_eps)
+            return x + y, st
+
+        x, m_states = jax.lax.scan(m_body, x, (up["mlstm"], m_states))
+        y, s_state = slstm_fwd(up["slstm"], x, s_state, cfg.norm_eps)
+        return x + y, m_states, s_state
+
+    def forward(self, params, batch):
+        cfg, cd = self.cfg, self.opts.cdt
+        tokens = batch["tokens"]
+        x = params["embed"]["tokens"].astype(cd)[tokens]
+        x = lshard(x, "batch", "seq", "embed")
+        states = self._zero_states(tokens.shape[0])
+
+        def body(x, inp):
+            up, m_st, s_st = inp
+            fn = self._unit_fwd
+            if self.opts.remat:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            x, m_st, s_st = fn(up, x, m_st, s_st)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (params["units"], states["mlstm"], states["slstm"]))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cd))
+        logits = _mask_padded_vocab(logits, cfg)
+        return lshard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from repro.models.transformer import DecoderLM
+
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return (nll * mask).sum() / denom, {"ce": (nll * mask).sum() / denom, "aux": aux, "tokens": denom}
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int):
+        del max_len  # recurrent: O(1) state
+        return {"states": self._zero_states(batch), "index": jnp.zeros((), jnp.int32)}
+
+    def cache_axes(self) -> dict:
+        m = {
+            "C": ("units", "per_unit", "batch", "heads", None, None),
+            "n": ("units", "per_unit", "batch", "heads", None),
+            "m": ("units", "per_unit", "batch", "heads"),
+        }
+        s = {k: ("units", "batch", "heads", None) for k in ("c", "n", "m", "h")}
+        return {"states": {"mlstm": m, "slstm": s}, "index": ()}
+
+    def decode_step(self, params, cache, tokens):
+        cfg, cd = self.cfg, self.opts.cdt
+        x = params["embed"]["tokens"].astype(cd)[tokens]  # (b, 1, d)
+        states = cache["states"]
+
+        def unit_body(x, inp):
+            up, m_st, s_st = inp
+
+            def m_body(x, inp2):
+                lp, st = inp2
+                y, st = mlstm_fwd(lp, x, st, cfg.norm_eps)
+                return x + y, st
+
+            x, m_st = jax.lax.scan(m_body, x, (up["mlstm"], m_st))
+            y, s_st = slstm_fwd(up["slstm"], x, s_st, cfg.norm_eps)
+            return x + y, (m_st, s_st)
+
+        x, (m_sts, s_sts) = jax.lax.scan(
+            unit_body, x, (params["units"], states["mlstm"], states["slstm"])
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_padded_vocab(
+            jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cd)), cfg)
+        return logits, {
+            "states": {"mlstm": m_sts, "slstm": s_sts},
+            "index": cache["index"] + 1,
+        }

@@ -1,0 +1,344 @@
+"""Zamba2-style hybrid LM: Mamba2 (SSD) backbone + one *shared* attention
+block applied every ``attn_every`` layers (arXiv:2411.15242).
+
+Mamba2 blocks use the SSD recurrence with scalar-per-head decay:
+    S_t = a_t * S_{t-1} + dt_t * (x_t outer B_t),   y_t = S_t C_t + D x_t
+with a short depthwise causal conv on the (x, B, C) path.  Training uses a
+chunkwise-parallel scan (intra-chunk attention-like matmuls + inter-chunk
+state recurrence), decode a single recurrent step -- O(1) state, so this
+arch runs ``long_500k``.  The shared attention uses a ring-buffer KV cache
+capped at ``cfg.long_context_window`` during decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.xlstm import _mask_padded_vocab
+from repro.parallel.sharding import lshard
+
+CONV_K = 4  # depthwise conv window (mamba2 default)
+
+
+# -------------------------------------------------------------- mamba2 block
+def init_mamba2(key, d_model, d_in, n_heads, d_state, dtype):
+    ks = jax.random.split(key, 6)
+    P = d_in // n_heads
+    conv_dim = d_in + 2 * d_state
+    return {
+        "ssm": {
+            # in_proj -> [z (d_in), x (d_in), B (N), C (N), dt (H)]
+            "w_in": L.dense_init(ks[0], (d_model, 2 * d_in + 2 * d_state + n_heads), dtype=dtype),
+            "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32) * 0.1).astype(dtype),
+            "A_log": jnp.log(jnp.linspace(1.0, float(n_heads), n_heads)).astype(dtype),
+            "D": jnp.ones((n_heads,), dtype),
+            "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01))).astype(dtype),
+            "w_out": L.dense_init(ks[2], (d_in, d_model), dtype=dtype),
+        },
+        "norm": L.init_rmsnorm(d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv.  x: (b, s, c), w: (K, c); ``tail`` (b, K-1, c)
+    supplies the preceding raw inputs for streaming decode (zeros at t=0)."""
+    K = w.shape[0]
+    if tail is None:
+        full = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        full = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(full[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out, full[:, -(K - 1) :, :]
+
+
+def _ssd_split(p, x, cfg_heads, d_in, d_state, conv_tail=None):
+    cd = x.dtype
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * d_state]
+    dt_raw = proj[..., -cfg_heads:]
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"].astype(cd), conv_tail)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(cd)
+    xc = xbc[..., :d_in]
+    B = xbc[..., d_in : d_in + d_state]
+    C = xbc[..., d_in + d_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xc, B, C, dt, new_tail
+
+
+def mamba2_fwd(params, x, eps, chunk: int = 128):
+    """Chunkwise-parallel SSD over the full sequence (training / prefill)."""
+    p = params["ssm"]
+    cd = x.dtype
+    b, s, d = x.shape
+    H = p["A_log"].shape[0]
+    d_in = p["w_out"].shape[0]
+    d_state = (p["w_in"].shape[1] - 2 * d_in - H) // 2
+    P = d_in // H
+
+    xn = L.rmsnorm(params["norm"], x, eps)
+    z, xc, B, C, dt, _ = _ssd_split(p, xn, H, d_in, d_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) negative
+    xh = xc.reshape(b, s, H, P)
+    xh = lshard(xh, "batch", "seq", "ssm_heads", None)
+    loga = dt * A[None, None, :]                             # (b, s, H) log decay
+
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    cs = chunk
+    xhc = xh.reshape(b, n_chunks, cs, H, P).swapaxes(0, 1)   # (n, b, cs, H, P)
+    Bc = B.reshape(b, n_chunks, cs, d_state).swapaxes(0, 1)
+    Cc = C.reshape(b, n_chunks, cs, d_state).swapaxes(0, 1)
+    dtc = dt.reshape(b, n_chunks, cs, H).swapaxes(0, 1)
+    logac = loga.reshape(b, n_chunks, cs, H).swapaxes(0, 1)
+
+    def chunk_body(S, inp):
+        xck, Bk, Ck, dtk, logak = inp                        # (b, cs, ...)
+        cum = jnp.cumsum(logak, axis=1)                      # (b, cs, H)
+        total = cum[:, -1, :]                                # (b, H)
+        # intra-chunk: y_intra[t] = sum_{u<=t} exp(cum_t - cum_u) dt_u (C_t.B_u) x_u
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (b, t, u, H)
+        tri = jnp.tril(jnp.ones((cs, cs), bool))[None, :, :, None]
+        gate = jnp.where(tri, jnp.exp(decay), 0.0)           # (b, t, u, H)
+        cb = jnp.einsum("btn,bun->btu", Ck.astype(jnp.float32), Bk.astype(jnp.float32))
+        w = gate * cb[..., None] * dtk[:, None, :, :]        # (b, t, u, H)
+        xhc_f = xck.astype(jnp.float32)
+        y_intra = jnp.einsum("btuh,buhp->bthp", w, xhc_f)
+        # carried-in state contribution: y_state[t] = exp(cum_t) * (C_t . S)
+        y_state = jnp.einsum("bhpn,btn->bthp", S, Ck.astype(jnp.float32))
+        y_state = y_state * jnp.exp(cum)[:, :, :, None]      # (b,cs,H) -> bcast P
+        y = y_intra + y_state
+        # state update: S' = exp(total) S + sum_u exp(total - cum_u) dt_u x_u B_u^T
+        w_state = jnp.exp(total[:, None, :] - cum) * dtk     # (b, cs, H)
+        S_new = S * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "buh,buhp,bun->bhpn", w_state, xhc_f, Bk.astype(jnp.float32)
+        )
+        return S_new, y
+
+    S0 = jnp.zeros((b, H, P, d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, S0, (xhc, Bc, Cc, dtc, logac))
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * cs, H, P)[:, :s]
+    y = y + xh[:, :s] * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+
+
+def mamba2_step(params, x, S, conv_tail, eps):
+    """Single-token recurrent step.  x: (b, 1, d); S: (b, H, P, N);
+    conv_tail: (b, CONV_K-1, conv_dim) raw pre-conv inputs of prior steps."""
+    p = params["ssm"]
+    cd = x.dtype
+    b = x.shape[0]
+    H = p["A_log"].shape[0]
+    d_in = p["w_out"].shape[0]
+    d_state = (p["w_in"].shape[1] - 2 * d_in - H) // 2
+    P = d_in // H
+    xn = L.rmsnorm(params["norm"], x, eps)
+    z, xc, B, C, dt, conv_tail = _ssd_split(p, xn, H, d_in, d_state, conv_tail)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :] * A[None, :])                    # (b, H)
+    xh = xc.reshape(b, H, P).astype(jnp.float32)
+    S_new = S * a[:, :, None, None] + (dt[:, 0, :, None, None] * xh[..., None]) * B[
+        :, 0, None, None, :
+    ].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", S_new, C[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd)), S_new, conv_tail
+
+
+# ---------------------------------------------------------------- hybrid LM
+class ZambaLM:
+    def __init__(self, cfg: ArchConfig, opts=None):
+        from repro.models.transformer import ModelOptions
+
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+        if cfg.n_layers % cfg.attn_every:
+            raise ValueError("n_layers must be divisible by attn_every")
+        self.n_units = cfg.n_layers // cfg.attn_every
+        self.d_in = cfg.ssm_expand * cfg.d_model
+        self.ssm_heads = cfg.ssm_heads or (self.d_in // 64)
+
+    def _init_unit(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        ks = jax.random.split(key, cfg.attn_every)
+        return jax.vmap(
+            lambda k: init_mamba2(k, cfg.d_model, self.d_in, self.ssm_heads,
+                                  cfg.ssm_state, pdt)
+        )(ks)
+
+    def init(self, key):
+        cfg, pdt = self.cfg, self.opts.pdt
+        k_emb, k_units, k_attn, k_mlp, k_head = jax.random.split(key, 5)
+        unit_keys = jax.random.split(k_units, self.n_units)
+        return {
+            "embed": {"tokens": L.dense_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype=pdt)},
+            "units": jax.vmap(self._init_unit)(unit_keys),
+            # ONE shared attention block (weights reused at every application)
+            "shared": {
+                "attn": L.init_attention(
+                    k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim, dtype=pdt,
+                ),
+                "attn_norm": L.init_rmsnorm(cfg.d_model, pdt),
+                "mlp": L.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, pdt),
+                "mlp_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            },
+            "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+            "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype=pdt),
+        }
+
+    def _shared_attn_fwd(self, sp, x, positions):
+        cfg = self.cfg
+        h = L.attention_fwd(
+            sp["attn"], L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps), positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            causal=True, attn_impl=self.opts.attn_impl, chunk=self.opts.attn_chunk,
+        )
+        x = x + h
+        x = x + L.mlp_fwd(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x, cfg.norm_eps))
+        return x
+
+    def forward(self, params, batch):
+        cfg, cd = self.cfg, self.opts.cdt
+        tokens = batch["tokens"]
+        x = params["embed"]["tokens"].astype(cd)[tokens]
+        x = lshard(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+        shared = params["shared"]
+
+        def unit_body(x, up):
+            def m_body(x, lp):
+                y = mamba2_fwd(lp, x, cfg.norm_eps)
+                return x + y, None
+
+            fn = m_body
+            if self.opts.remat:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            x, _ = jax.lax.scan(fn, x, up)
+            x = self._shared_attn_fwd(shared, x, positions)
+            return lshard(x, "batch", "seq", "embed"), None
+
+        x, _ = jax.lax.scan(unit_body, x, params["units"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_padded_vocab(
+            jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cd)), cfg)
+        return lshard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+        return ce, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ----------------------------------------------------------------- serve
+    def kv_len(self, max_len: int) -> int:
+        w = self.cfg.long_context_window
+        return min(max_len, w) if w else max_len
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        P = self.d_in // self.ssm_heads
+        S = jnp.zeros((self.n_units, cfg.attn_every, batch, self.ssm_heads, P, cfg.ssm_state),
+                      jnp.float32)
+        conv_dim = self.d_in + 2 * cfg.ssm_state
+        conv = jnp.zeros(
+            (self.n_units, cfg.attn_every, batch, CONV_K - 1, conv_dim), jnp.float32
+        )
+        kvl = self.kv_len(max_len)
+        kv = L.init_kv_cache(batch, kvl, cfg.n_kv_heads, cfg.resolved_head_dim,
+                             dtype=self.opts.cdt)
+        kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (self.n_units,) + a.shape), kv)
+        return {
+            "S": S,
+            "conv": conv,
+            "kv": kv,
+            "kv_pos": jnp.full((self.n_units, batch, kvl), -1, jnp.int32),  # ring positions
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self) -> dict:
+        kv = ("units", "batch", "kv_seq", "kv_heads", "head_dim")
+        return {
+            "S": ("units", "per_unit", "batch", "ssm_heads", None, None),
+            "conv": ("units", "per_unit", "batch", None, None),
+            "kv": {"k": kv, "v": kv},
+            "kv_pos": ("units", "batch", None),
+            "index": (),
+        }
+
+    def _shared_attn_step(self, sp, x, kvc, kv_pos, index):
+        """Ring-buffer single-token shared attention."""
+        cfg = self.cfg
+        cd = x.dtype
+        b = x.shape[0]
+        hd, H, K = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        kvl = kvc["k"].shape[1]
+        slot = index % kvl
+        xn = L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps)
+        ap = sp["attn"]
+        q = jnp.einsum("bsd,dh->bsh", xn, ap["wq"].astype(cd)).reshape(b, 1, H, hd)
+        k_new = jnp.einsum("bsd,dh->bsh", xn, ap["wk"].astype(cd)).reshape(b, 1, K, hd)
+        v_new = jnp.einsum("bsd,dh->bsh", xn, ap["wv"].astype(cd)).reshape(b, 1, K, hd)
+        pos = jnp.full((b, 1), index, jnp.int32)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k_new = L.apply_rope(k_new, pos, cfg.rope_theta)
+        kvc = {
+            "k": jax.lax.dynamic_update_slice(kvc["k"], k_new.astype(kvc["k"].dtype), (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(kvc["v"], v_new.astype(kvc["v"].dtype), (0, slot, 0, 0)),
+        }
+        kv_pos = jax.lax.dynamic_update_slice(kv_pos, pos, (0, slot))
+        k = L._repeat_kv(kvc["k"].astype(cd), H // K)
+        v = L._repeat_kv(kvc["v"].astype(cd), H // K)
+        valid = (kv_pos >= 0) & (kv_pos <= index)
+        mask = valid[:, None, None, :]
+        h = L.attention_scores(q, k, v, mask, compute_dtype=cd).reshape(b, 1, H * hd)
+        x = x + jnp.einsum("bsh,hd->bsd", h, ap["wo"].astype(cd))
+        x = x + L.mlp_fwd(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x, cfg.norm_eps))
+        return x, kvc, kv_pos
+
+    def decode_step(self, params, cache, tokens):
+        cfg, cd = self.cfg, self.opts.cdt
+        x = params["embed"]["tokens"].astype(cd)[tokens]
+        index = cache["index"]
+        shared = params["shared"]
+
+        def unit_body(x, inp):
+            up, S_u, conv_u, kvc, kv_pos = inp
+
+            def m_body(x, inp2):
+                lp, S, tail = inp2
+                y, S, tail = mamba2_step(lp, x, S, tail, cfg.norm_eps)
+                return x + y, (S, tail)
+
+            x, (S_u, conv_u) = jax.lax.scan(m_body, x, (up, S_u, conv_u))
+            x, kvc, kv_pos = self._shared_attn_step(shared, x, kvc, kv_pos, index)
+            return x, (S_u, conv_u, kvc, kv_pos)
+
+        x, (S, conv, kv, kv_pos) = jax.lax.scan(
+            unit_body, x,
+            (params["units"], cache["S"], cache["conv"], cache["kv"], cache["kv_pos"]),
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_padded_vocab(
+            jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cd)), cfg)
+        return logits, {"S": S, "conv": conv, "kv": kv, "kv_pos": kv_pos,
+                        "index": index + 1}

@@ -1,0 +1,13 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+)
+from repro.optim.schedule import get_schedule, warmup_cosine, wsd
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "clip_by_global_norm", "global_norm",
+    "init_opt_state", "get_schedule", "warmup_cosine", "wsd",
+]

@@ -1,0 +1,50 @@
+"""LR schedules: linear warmup + cosine decay, and WSD (Warmup-Stable-Decay,
+the MiniCPM schedule -- arXiv:2404.06395) used by the minicpm-2b config."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog)
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f
+
+
+def wsd(peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: hold peak LR for most of training, then decay
+    exponentially in the final ``decay_frac`` of steps."""
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        stable = jnp.asarray(peak_lr, jnp.float32)
+        prog = jnp.clip(
+            (step - decay_start) / jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0
+        )
+        decay = peak_lr * jnp.power(final_frac, prog)
+        out = jnp.where(step < warmup_steps, warm, stable)
+        return jnp.where(step >= decay_start, decay, out)
+
+    return f
+
+
+def get_schedule(name: str, peak_lr: float, warmup_steps: int, total_steps: int):
+    if name == "cosine":
+        return warmup_cosine(peak_lr, warmup_steps, total_steps)
+    if name == "wsd":
+        return wsd(peak_lr, warmup_steps, total_steps)
+    raise ValueError(f"unknown schedule {name!r}")

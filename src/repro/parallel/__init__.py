@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    activate,
+    active_mesh,
+    default_rules,
+    lshard,
+    opt_shardings,
+    param_shardings,
+    param_spec,
+    resolve_spec,
+)
+
+__all__ = [
+    "activate", "active_mesh", "default_rules", "lshard", "opt_shardings",
+    "param_shardings", "param_spec", "resolve_spec",
+]

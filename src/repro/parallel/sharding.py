@@ -1,0 +1,268 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for the production meshes.
+
+Models annotate activations with *logical* axis names via :func:`lshard`
+(e.g. ``lshard(x, "batch", "seq", "embed")``); a rule table maps logical
+names to physical mesh axes.  Rules are resolved *shape-aware*: a mapping
+that does not divide the dimension evenly (e.g. 2 KV heads over a 16-way
+``model`` axis) degrades to replication for that dim instead of failing --
+this is what lets one rule table serve all 10 architectures.
+
+Parameter sharding is path-based (:func:`param_spec`): attention/FFN weights
+are tensor-parallel over ``model``, expert stacks are expert-parallel over
+``model``, embeddings/LM head are vocab-parallel, and optimizer state is
+additionally ZeRO-1 sharded over the data axes (:func:`opt_spec`).
+
+The active mesh + rules live in a context (:func:`activate`) so the same
+model code traces correctly under ``jit``, ``lower()`` for the dry-run, and
+plain eager smoke tests (no mesh -> no-op).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables.  Values are mesh-axis names or tuples of them.
+# ---------------------------------------------------------------------------
+
+def default_rules(mesh_axes: Sequence[str], sequence_parallel: bool = False) -> dict:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    rules = {
+        "batch": data_axes,                # DP over pod x data
+        "seq": (),                         # replicated (SP overrides)
+        "seq_sp": (),                      # residual-stream seq (Megatron SP
+                                           # region between attn/mlp blocks)
+        "embed": (),                       # activations replicated on d_model
+        "heads": ("model",),               # TP over attention heads
+        "kv_heads": ("model",),            # degrades to replicate if indivisible
+        "head_dim": (),
+        "ffn": ("model",),                 # TP over FFN hidden
+        "experts": ("model",),             # EP over expert stack
+        "expert_ff": (),                   # per-expert hidden stays local
+        "vocab": ("model",),               # vocab-parallel embeddings/logits
+        "ssm_heads": ("model",),
+        "ssm_state": (),
+        "zero": data_axes,                 # ZeRO-1 optimizer-state axis
+        "fsdp": data_axes,                 # ZeRO-3 weight sharding over DP
+                                           # (the paper's §2 "ZeRO shards
+                                           # model weights ... all-gather /
+                                           # reduce-scatter"); () disables
+        "stage": (),                       # pipeline stage (shard_map PP only)
+    }
+    if sequence_parallel:
+        # SP: shard activation seq dim over `model` between attention/FFN
+        # blocks (norms/residuals); attention itself re-gathers via `heads`.
+        rules["seq"] = ("model",)
+    return rules
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Optional[dict] = None, sequence_parallel: bool = False):
+    """Enable sharding constraints for model code traced in this context."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules or default_rules(mesh.axis_names, sequence_parallel)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def data_axis_names() -> tuple:
+    if _CTX.mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in _CTX.mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Resolution: logical names -> PartitionSpec, shape-aware.
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, names) -> int:
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh,
+                 rules: dict) -> P:
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        entry = rules.get(name, ()) if name else ()
+        entry = tuple(e for e in (entry if isinstance(entry, tuple) else (entry,)) if e)
+        entry = tuple(e for e in entry if e not in used)
+        if entry and dim % _axis_size(mesh, entry) == 0 and dim > 0:
+            parts.append(entry if len(entry) > 1 else entry[0])
+            used.update(entry)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def pshard(x: jax.Array, *entries) -> jax.Array:
+    """Constrain with RAW mesh-axis names (not logical); entries may be None,
+    an axis name, or a tuple of axis names.  Shape-aware like lshard: a
+    non-dividing entry degrades to replication.  No-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    parts = []
+    used: set[str] = set()
+    for dim, e in zip(x.shape, entries):
+        names = tuple(a for a in ((e,) if isinstance(e, str) else (e or ()))
+                      if a in mesh.axis_names and a not in used)
+        if names and dim % _axis_size(mesh, names) == 0 and dim > 0:
+            parts.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+def lshard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no mesh is active, e.g. single-device smoke tests)."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"lshard: {len(logical)} names for rank-{x.ndim} array")
+    spec = resolve_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: path-based rules.
+# ---------------------------------------------------------------------------
+
+#: map from path-substring to logical dim names (matched in order; first hit
+#: wins).  Paths are '/'-joined pytree key paths, e.g. "layers/attn/wq".
+PARAM_RULES: list[tuple[str, tuple]] = [
+    ("embed/tokens", ("vocab", None)),
+    ("embed/pos", (None, None)),
+    ("lm_head", (None, "vocab")),
+    ("attn/wq", (None, "heads")),            # (d, H*hd) column-parallel
+    ("attn/wk", (None, "kv_heads")),
+    ("attn/wv", (None, "kv_heads")),
+    ("attn/wo", ("heads", None)),            # row-parallel
+    ("mlp/w_gate", (None, "ffn")),
+    ("mlp/w_in", (None, "ffn")),
+    ("mlp/w_out", ("ffn", None)),
+    ("moe/router", (None, None)),
+    ("moe/w_gate", ("experts", None, "expert_ff")),
+    ("moe/w_in", ("experts", None, "expert_ff")),
+    ("moe/w_out", ("experts", "expert_ff", None)),
+    ("norm", (None,)),
+    # xLSTM / Mamba2 projections: column-parallel in, row-parallel out
+    ("ssm/w_in", (None, "ffn")),
+    ("ssm/w_out", ("ffn", None)),
+    ("ssm/", (None,)),                       # gates/biases: replicate
+]
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def logical_names_for(path_str: str, ndim: int) -> tuple:
+    for frag, names in PARAM_RULES:
+        if frag in path_str:
+            if len(names) == ndim:
+                return names
+            if len(names) < ndim:
+                # stacked-layer leading dim(s) from scan: pad on the left
+                return (None,) * (ndim - len(names)) + tuple(names)
+            return tuple(names[-ndim:]) if ndim else ()
+    return (None,) * ndim
+
+
+def param_spec(path_str: str, shape: Sequence[int], mesh: Mesh,
+               rules: Optional[dict] = None) -> P:
+    """TP/EP spec from the path rules, then ZeRO-3: the largest remaining
+    replicated dim is sharded over the data axes (weights are all-gathered
+    at use, gradients reduce-scattered -- the paper's DP volume v_d)."""
+    rules = rules or default_rules(mesh.axis_names)
+    base = resolve_spec(logical_names_for(path_str, len(shape)), shape, mesh, rules)
+    fsdp_axes = tuple(rules.get("fsdp", ()) or ())
+    if not fsdp_axes or "norm" in path_str or not shape:
+        return base
+    fsize = _axis_size(mesh, fsdp_axes)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+        if parts[i] is None and shape[i] % fsize == 0 and shape[i] >= fsize:
+            parts[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            return P(*parts)
+    return base
+
+
+def param_shardings(params_shape, mesh: Mesh, rules: Optional[dict] = None):
+    """Pytree of NamedShardings for a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    rules = rules or default_rules(mesh.axis_names)
+
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_spec(path_str: str, shape: Sequence[int], mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    """ZeRO-1: optimizer moments take the param spec, then shard the largest
+    still-replicated dim over any data axes the param spec does not already
+    use (with ZeRO-3/fsdp enabled, params usually consume them and the
+    moments simply inherit that sharding)."""
+    rules = rules or default_rules(mesh.axis_names)
+    base = param_spec(path_str, shape, mesh, rules)
+    used = {
+        a
+        for part in base
+        if part
+        for a in (part if isinstance(part, tuple) else (part,))
+    }
+    zero_axes = tuple(a for a in (rules.get("zero", ()) or ()) if a not in used)
+    if not zero_axes:
+        return base
+    zsize = _axis_size(mesh, zero_axes)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % zsize == 0 and shape[i] > 0:
+            parts[i] = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+            break
+    return P(*parts)
+
+
+def opt_shardings(params_shape, mesh: Mesh, rules: Optional[dict] = None):
+    def f(path, leaf):
+        return NamedSharding(mesh, opt_spec(_path_str(path), leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)

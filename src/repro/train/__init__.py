@@ -1,0 +1,12 @@
+from repro.train.train_step import (
+    cache_shardings,
+    loss_and_grads,
+    make_serve_step,
+    make_train_step,
+)
+from repro.train.trainer import FaultInjector, Trainer, TrainerConfig
+
+__all__ = [
+    "cache_shardings", "loss_and_grads", "make_serve_step", "make_train_step",
+    "FaultInjector", "Trainer", "TrainerConfig",
+]

@@ -1,0 +1,205 @@
+"""train_step / serve_step builders: loss + grad + AdamW update under pjit,
+with microbatched gradient accumulation and donated buffers.
+
+``make_train_step`` returns a jit-compiled function whose in/out shardings
+implement DP over (pod, data), TP/EP over model, and ZeRO-1 optimizer-state
+sharding -- the pjit realization of the hybrid parallelism whose
+communication groups Arnold schedules.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.parallel import sharding as shd
+
+
+def loss_and_grads(model, params, batch, microbatches: int = 1,
+                   unroll: bool = False):
+    """Value+grad with optional gradient accumulation over microbatches.
+
+    Default: sequential ``lax.scan`` (constant HLO size).  ``unroll=True``
+    uses a python loop instead -- identical math, but every microbatch is
+    explicit in the HLO, which the dry-run's analysis compile needs for
+    trip-count-true cost analysis (XLA counts ``while`` bodies once).
+    """
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    b = batch["tokens"].shape[0]
+    assert b % microbatches == 0, (b, microbatches)
+    mb = b // microbatches
+    split = jax.tree.map(
+        lambda a: a.reshape((microbatches, mb) + a.shape[1:]), batch
+    )
+
+    def one(params, mbatch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, mbatch)
+        return loss, metrics, grads
+
+    def body(carry, mbatch):
+        loss_acc, grads_acc = carry
+        loss, metrics, grads = one(params, mbatch)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), grads_acc, grads
+        )
+        return (loss_acc + loss, grads_acc), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if unroll:
+        carry = (jnp.zeros(()), zeros)
+        for i in range(microbatches):
+            mbatch = jax.tree.map(lambda a: a[i], split)
+            carry, metrics = body(carry, mbatch)
+        loss_sum, grads_sum = carry
+    else:
+        (loss_sum, grads_sum), metrics = jax.lax.scan(body, (0.0, zeros), split)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+    inv = 1.0 / microbatches
+    grads = jax.tree.map(lambda g: g * inv, grads_sum)
+    return loss_sum * inv, metrics, grads
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, mesh=None, microbatches: int = 1,
+                    donate: bool = True):
+    """Build the jitted train step.  With a mesh, in/out shardings are the
+    param/opt rules from ``parallel.sharding`` and batch is DP-sharded."""
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = loss_and_grads(model, params, batch, microbatches)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = shd.param_shardings(params_shape, mesh)
+    o_shard = {
+        "m": shd.opt_shardings(params_shape, mesh),
+        "v": shd.opt_shardings(params_shape, mesh),
+        "step": NamedSharding(mesh, P()),
+    }
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def batch_shardings(batch_shape):
+        return jax.tree.map(
+            lambda leaf: NamedSharding(
+                mesh,
+                P(data_axes if len(data_axes) > 1 else data_axes[0])
+                if leaf.shape and leaf.shape[0] % _prod(mesh, data_axes) == 0
+                else P(),
+            ),
+            batch_shape,
+        )
+
+    metric_shard = NamedSharding(mesh, P())
+
+    def jitted(batch_shape):
+        return jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, batch_shardings(batch_shape)),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    jitted.param_shardings = p_shard
+    jitted.opt_shardings = o_shard
+    jitted.batch_shardings = batch_shardings
+    return jitted
+
+
+def _prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def make_serve_step(model, mesh=None):
+    """Jitted single-token decode (cache donated for in-place update)."""
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    if mesh is None:
+        return jax.jit(serve_step, donate_argnums=(1,))
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = shd.param_shardings(params_shape, mesh)
+
+    def jitted(cache_shape, tokens_shape):
+        c_shard = cache_shardings(cache_shape, mesh, model=model)
+        t_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), tokens_shape)
+        return jax.jit(
+            serve_step,
+            in_shardings=(p_shard, c_shard, None),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+
+    jitted.param_shardings = p_shard
+    return jitted
+
+
+def cache_shardings(cache_shape, mesh, rules=None, model=None):
+    """KV caches / recurrent states: batch over data axes; KV heads over
+    ``model`` when the GQA head count divides it, else the sequence dim
+    (flash-decoding-style partial attention); SSM/mLSTM heads over ``model``.
+
+    Logical names come from the model's ``cache_axes()`` (exact layout);
+    falls back to a rank-based heuristic for foreign cache pytrees.
+    """
+    rules = rules or shd.default_rules(mesh.axis_names)
+    model_size = mesh.shape.get("model", 1)
+
+    def resolve_names(names, shape):
+        local_rules = dict(rules)
+        names = list(names)
+        # decide kv_heads vs kv_seq by divisibility
+        if "kv_heads" in names:
+            hd_idx = names.index("kv_heads")
+            if shape[hd_idx] % model_size == 0:
+                local_rules["kv_seq"] = ()
+            else:
+                names[hd_idx] = None
+                local_rules["kv_seq"] = ("model",)
+        local_rules.setdefault("kv_seq", ())
+        local_rules.setdefault("layers", ())
+        local_rules.setdefault("units", ())
+        local_rules.setdefault("per_unit", ())
+        spec = shd.resolve_spec(names, shape, mesh, local_rules)
+        return NamedSharding(mesh, spec)
+
+    if model is not None and hasattr(model, "cache_axes"):
+        axes = model.cache_axes()
+
+        def g(names, leaf):
+            if not leaf.shape:
+                return NamedSharding(mesh, P())
+            return resolve_names(names, leaf.shape)
+
+        return jax.tree.map(g, axes, cache_shape,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def f(path, leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        names: list = [None] * len(leaf.shape)
+        path_s = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        ndim = len(leaf.shape)
+        if ("kv" in path_s or "cross" in path_s) and ndim >= 4:
+            names[-4] = "batch"
+            names[-2] = "kv_heads"
+            names[-3] = "kv_seq"
+        elif path_s.endswith("S") or "states" in path_s:
+            if ndim >= 4:
+                names[-3] = "ssm_heads"
+        return resolve_names(names, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

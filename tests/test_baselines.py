@@ -1,0 +1,97 @@
+"""Tests for the four baseline schedulers (§7.1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_BASELINES,
+    Cluster,
+    Infeasible,
+    JobSpec,
+    best_fit,
+    build_comm_matrix,
+    gpu_packing,
+    max_spreads,
+    random_fit,
+    topo_aware,
+)
+from repro.core.baselines import _fm_bipartition, _job_graph
+
+
+class TestAllBaselines:
+    @pytest.mark.parametrize("name", list(ALL_BASELINES))
+    def test_valid_placement(self, name, small_comm, cluster_i):
+        p = ALL_BASELINES[name](small_comm, cluster_i)
+        ids = p.node_ids()
+        assert len(ids) == small_comm.n_cells
+        assert len(set(ids)) == len(ids)
+        assert all(cluster_i.is_free(n) for n in ids)
+
+    @pytest.mark.parametrize("name", list(ALL_BASELINES))
+    def test_infeasible_raises(self, name, small_comm):
+        tiny = Cluster.uniform(2, 2)  # 4 nodes < 12 needed
+        with pytest.raises(Infeasible):
+            ALL_BASELINES[name](small_comm, tiny)
+
+    def test_best_fit_prefers_fullest_pod(self, small_comm):
+        cluster = Cluster([12, 30])
+        p = best_fit(small_comm, cluster)
+        pods = p.minipod_of()
+        assert (pods == 0).all()  # 12 cells exactly fill the smaller pod
+
+    def test_gpu_packing_prefers_largest_pod(self, small_comm):
+        cluster = Cluster([12, 30])
+        p = gpu_packing(small_comm, cluster)
+        assert (p.minipod_of() == 1).all()
+
+    def test_random_fit_is_seeded_deterministic(self, small_comm, cluster_i):
+        p1 = random_fit(small_comm, cluster_i, seed=7)
+        p2 = random_fit(small_comm, cluster_i, seed=7)
+        assert (p1.assignment == p2.assignment).all()
+
+    def test_random_fit_balances(self, small_comm):
+        cluster = Cluster.uniform(3, 8)
+        p = random_fit(small_comm, cluster, seed=0)
+        pods, counts = np.unique(p.minipod_of(), return_counts=True)
+        assert len(pods) == 3 and counts.max() - counts.min() <= 1
+
+
+class TestTopoAware:
+    def test_job_graph_edges(self, small_comm):
+        adj = _job_graph(small_comm)
+        assert len(adj) == small_comm.n_cells
+        # PP chain edge between (0,0)-(0,1)
+        ids = small_comm.cell_ids()
+        assert ids[0, 1] in adj[ids[0, 0]]
+        # DP ring edge between (0,0)-(1,0)
+        assert ids[1, 0] in adj[ids[0, 0]]
+
+    def test_fm_respects_sizes(self, small_comm):
+        adj = _job_graph(small_comm)
+        verts = list(adj)
+        a, b = _fm_bipartition(adj, verts, size_a=5)
+        assert len(a) == 5 and len(b) == len(verts) - 5
+        assert set(a) | set(b) == set(verts)
+
+    def test_fm_finds_obvious_cut(self):
+        # Two 4-cliques joined by one light edge: FM should cut the bridge.
+        adj = {i: {} for i in range(8)}
+        for grp in (range(4), range(4, 8)):
+            for i in grp:
+                for j in grp:
+                    if i != j:
+                        adj[i][j] = 10.0
+        adj[3][4] = adj[4][3] = 0.1
+        # adversarial initial split: interleaved
+        verts = [0, 4, 1, 5, 2, 6, 3, 7]
+        a, b = _fm_bipartition(adj, verts, size_a=4)
+        assert set(a) in ({0, 1, 2, 3}, {4, 5, 6, 7})
+
+    def test_topo_aware_groups_pp_chains(self, model7b):
+        """With dominant PP edge weight, topo-aware should co-locate rows."""
+        cluster = Cluster.uniform(4, 4)
+        job = JobSpec(n_gpus=8 * 8, tp=4, pp=4, model=model7b)  # 4x4 matrix
+        comm = build_comm_matrix(job)
+        p = topo_aware(comm, cluster)
+        dp_s, pp_s = max_spreads(p)
+        assert pp_s <= 2  # chains mostly intact

@@ -1,0 +1,53 @@
+"""Tests for the automated characterization pipeline (§4 -> §5.2 DB)."""
+
+import numpy as np
+import pytest
+
+from repro.core import CharacterizationDB, Cluster, JobSpec, ModelSpec
+from repro.core.characterize import characterize, characterize_sweep
+
+
+def dense_model(layers=32, h=4096):
+    return ModelSpec(name=f"dense-{layers}L", hidden=h, layers=layers,
+                     vocab=50304, seq_len=2048, global_batch=512,
+                     micro_batch=1, d_ff=4 * h)
+
+
+def moe_model():
+    return ModelSpec(name="moe", hidden=4096, layers=32, vocab=50304,
+                     seq_len=2048, global_batch=512, micro_batch=1,
+                     n_experts=16, top_k=4, d_expert=8192)
+
+
+class TestCharacterize:
+    def test_pp_wins_for_deep_pipelines(self):
+        """Deep pipeline + many microbatches -> PP traffic dominates -> the
+        record must prefer PP alignment (paper: dense models on H800)."""
+        job = JobSpec(n_gpus=64 * 8, tp=8, pp=8, model=dense_model())
+        rec = characterize(job, lambda: Cluster.uniform(8, 12))
+        assert rec.j_pp >= rec.j_dp
+        assert rec.unit == "pp"
+        a, b = rec.affinity()
+        assert a <= 0.5
+
+    def test_alignment_beats_naive(self):
+        job = JobSpec(n_gpus=64 * 8, tp=8, pp=8, model=dense_model())
+        rec = characterize(job, lambda: Cluster.uniform(8, 12))
+        assert rec.j_dp >= 0 and rec.j_pp >= 0
+        assert rec.j_pp > 0  # alignment must beat random placement
+
+    def test_sweep_feeds_db_and_lookup_uses_it(self):
+        jobs = [
+            JobSpec(n_gpus=32 * 8, tp=8, pp=4, model=dense_model(16)),
+            JobSpec(n_gpus=64 * 8, tp=8, pp=8, model=moe_model()),
+        ]
+        recs = characterize_sweep(jobs, lambda: Cluster.uniform(8, 12))
+        db = CharacterizationDB(records=recs)
+        from repro.core import build_comm_matrix
+        comm = build_comm_matrix(jobs[0])
+        alpha, beta, unit = db.affinity_for(comm)
+        assert abs(alpha + beta - 1.0) < 1e-9
+        # nearest record should be the dense one we just characterized
+        r1, r2 = comm.ratios()
+        nearest = db.lookup(r1, r2)
+        assert nearest.model_name == "dense-16L"

@@ -1,0 +1,148 @@
+"""Tests for Arnold's MILP scheduler (Eq. 4-10) and its greedy bounding."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ALL_BASELINES,
+    Cluster,
+    Infeasible,
+    JobSpec,
+    build_comm_matrix,
+    max_spreads,
+    schedule_mip,
+    weighted_spread,
+)
+from repro.core.mip import (
+    _counts_objective,
+    _greedy_candidates,
+    _objective_lower_bound,
+    _solve_counts,
+)
+
+
+class TestSolveCounts:
+    def test_feasible_counts_respect_capacity_and_allocation(self):
+        free = np.array([4.0, 4.0, 4.0])
+        counts, obj, _, _ = _solve_counts(2, 5, free, 0.3, 0.7, True, 10.0)
+        assert counts.shape == (5, 3)
+        assert (counts.sum(axis=1) == 2).all()          # Eq. 7 allocation
+        assert (counts.sum(axis=0) <= free).all()       # Eq. 6 capacity
+        assert obj >= _objective_lower_bound(2, 5, free, 0.3, 0.7) - 1e-9
+
+    def test_infeasible_raises(self):
+        with pytest.raises(Infeasible):
+            _solve_counts(4, 10, np.array([3.0, 3.0]), 0.5, 0.5, True, 10.0)
+
+    def test_alpha_zero_minimizes_unit_spread(self):
+        # beta=1: every group should land in exactly one pod when possible.
+        free = np.array([8.0, 8.0, 8.0, 8.0])
+        counts, obj, _, _ = _solve_counts(4, 8, free, 0.0, 1.0, True, 10.0)
+        assert max((row > 0).sum() for row in counts) == 1
+
+    def test_alpha_one_is_pure_binpacking(self):
+        # alpha=1 reduces to minimizing pods used (paper §7.1 observation).
+        free = np.array([16.0, 8.0, 8.0])
+        counts, obj, _, _ = _solve_counts(4, 4, free, 1.0, 0.0, True, 10.0)
+        assert (counts.sum(axis=0) > 0).sum() == 1  # all 16 nodes fit pod 0
+
+    def test_greedy_skips_solver_when_bound_met(self):
+        free = np.array([64.0, 64.0])
+        counts, obj, dt, method = _solve_counts(8, 8, free, 0.3, 0.7, True, 10.0)
+        assert method == "greedy-proven-optimal"
+        assert dt < 0.5
+
+    @given(
+        group_size=st.sampled_from([1, 2, 4, 8]),
+        m=st.integers(1, 12),
+        pods=st.lists(st.integers(0, 40), min_size=2, max_size=8),
+        alpha=st.sampled_from([0.0, 0.3, 0.5, 1.0]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_property_feasibility(self, group_size, m, pods, alpha):
+        free = np.array(pods, dtype=float)
+        if free.sum() < group_size * m:
+            with pytest.raises(Infeasible):
+                _solve_counts(group_size, m, free, alpha, 1 - alpha, True, 5.0)
+            return
+        counts, obj, _, _ = _solve_counts(group_size, m, free, alpha, 1 - alpha, True, 5.0)
+        assert (counts.sum(axis=1) == group_size).all()
+        assert (counts.sum(axis=0) <= free + 1e-9).all()
+        assert obj >= _objective_lower_bound(group_size, m, free, alpha, 1 - alpha) - 1e-9
+
+
+class TestGreedyBound:
+    @given(
+        group_size=st.sampled_from([2, 4, 8]),
+        m=st.integers(1, 10),
+        pods=st.lists(st.integers(1, 30), min_size=2, max_size=6),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_lower_bound_is_a_bound(self, group_size, m, pods):
+        free = np.array(pods, dtype=float)
+        if free.sum() < group_size * m:
+            return
+        lb = _objective_lower_bound(group_size, m, free, 0.3, 0.7)
+        cand, obj = _greedy_candidates(group_size, m, free, 0.3, 0.7)
+        if cand is not None:
+            assert obj >= lb - 1e-9
+            assert (cand.sum(axis=1) == group_size).all()
+            assert (cand.sum(axis=0) <= free).all()
+
+
+class TestScheduleMip:
+    def test_end_to_end_small(self, small_comm, cluster_i):
+        res = schedule_mip(small_comm, cluster_i, alpha=0.3)
+        p = res.placement
+        assert sorted(p.node_ids()) == sorted(set(p.node_ids()))
+        assert all(cluster_i.is_free(n) for n in p.node_ids())
+        assert res.max_unit_spread >= 1
+
+    def test_beats_or_ties_all_baselines_setting_iii(self, model7b):
+        cluster = Cluster.paper_setting("iii")
+        job = JobSpec(n_gpus=46 * 8 * 8, tp=8, pp=8, model=model7b)
+        comm = build_comm_matrix(job)
+        for alpha in (0.0, 0.3, 0.5):
+            res = schedule_mip(comm, cluster, alpha=alpha)
+            ours = weighted_spread(res.placement, alpha)
+            for name, fn in ALL_BASELINES.items():
+                theirs = weighted_spread(fn(comm, cluster), alpha)
+                assert ours <= theirs + 1e-9, (alpha, name, ours, theirs)
+
+    def test_fragmented_cluster(self, model7b):
+        """Partially-occupied cluster: the greedy bound usually cannot prove
+        optimality here, exercising the real MILP path."""
+        cluster = Cluster.uniform(4, 24)
+        rng = np.random.default_rng(0)
+        busy = rng.choice(cluster.n_nodes, size=40, replace=False)
+        cluster.allocate([int(b) for b in busy])
+        job = JobSpec(n_gpus=24 * 8, tp=4, pp=4, model=model7b)  # 24 nodes
+        comm = build_comm_matrix(job)
+        res = schedule_mip(comm, cluster, alpha=0.3, time_limit=10.0)
+        assert all(cluster.is_free(n) for n in res.placement.node_ids())
+
+    def test_rank_contiguity_within_rows(self, small_comm, cluster_i):
+        """§5.2 rank re-indexing: within each PP group (row), the stages
+        hosted by one minipod occupy a contiguous run of pipeline ranks, so
+        send-recv crosses a pod boundary at most (spread-1) times."""
+        res = schedule_mip(small_comm, cluster_i, alpha=0.3)
+        pods = res.placement.minipod_of()
+        for r in range(pods.shape[0]):
+            row = list(pods[r, :])
+            # no pod appears, disappears, then reappears along the chain
+            seen, prev = set(), None
+            for p in row:
+                if p != prev:
+                    assert p not in seen, f"row {r}: pod {p} re-appears in {row}"
+                    seen.add(p)
+                prev = p
+
+    def test_unit_dp(self, small_comm, cluster_i):
+        res = schedule_mip(small_comm, cluster_i, alpha=0.3, unit="dp")
+        assert res.placement.assignment.shape == small_comm.shape
+
+    def test_bad_unit(self, small_comm, cluster_i):
+        with pytest.raises(ValueError):
+            schedule_mip(small_comm, cluster_i, alpha=0.3, unit="tp")

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step + one decode step on CPU, asserting shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import ModelOptions, build_model
+from repro.models.whisper import N_FRAMES
+
+OPTS = ModelOptions(compute_dtype="float32", remat=False)
+
+
+def tiny_batch(cfg, b=2, s=12, key=0):
+    rng = np.random.default_rng(key)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_patches, cfg.d_model)) * 0.1, jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, 24, cfg.d_model)) * 0.1, jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, OPTS)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = tiny_batch(cfg)
+
+        @jax.jit
+        def step(p, b):
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+            return loss, metrics, grads
+
+        loss, metrics, grads = step(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        assert bool(jnp.isfinite(gnorm)), f"{arch}: grad norm not finite"
+        assert float(gnorm) > 0.0, f"{arch}: zero gradients"
+
+    def test_forward_shapes(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, OPTS)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = tiny_batch(cfg)
+        logits, aux = jax.jit(model.forward)(params, batch)
+        b, s = batch["tokens"].shape
+        assert logits.shape == (b, s, cfg.vocab), (arch, logits.shape)
+        assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: logits not finite"
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, OPTS)
+        params = model.init(jax.random.PRNGKey(0))
+        b, max_len = 2, 16
+        cache = model.init_cache(b, max_len)
+        step = jax.jit(model.decode_step)
+        tok = jnp.zeros((b, 1), jnp.int32)
+        logits, cache = step(params, cache, tok)
+        assert logits.shape == (b, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert int(cache["index"]) == 1
+        logits2, cache = step(params, cache, tok)
+        assert int(cache["index"]) == 2
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "xlstm-350m", "zamba2-2.7b", "whisper-tiny"])
+def test_train_decode_parity(arch):
+    """Teacher-forced decode must reproduce the training-forward logits --
+    the strongest correctness check tying both code paths together."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(1))
+    b, s = 2, 8
+    batch = tiny_batch(cfg, b=b, s=s, key=1)
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+
+    cache = model.init_cache(b, s)
+    if cfg.family == "audio":
+        cache = jax.jit(model.prefill_cross)(params, cache, batch["frames"])
+        cache = jax.tree.map(
+            lambda a, b_: a if a.shape == b_.shape else a, cache, cache
+        )
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(s):
+        lg, cache = step(params, cache, batch["tokens"][:, t : t + 1])
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    if cfg.family == "vlm":
+        pytest.skip("vlm forward includes patch prefix; decode is text-only")
+    np.testing.assert_allclose(
+        np.asarray(logits_full), np.asarray(logits_dec), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_param_count_sanity():
+    """Analytic param_count should be within ~25% of actual init size for
+    the reduced transformer families (used for MODEL_FLOPS roofline)."""
+    for arch in ["granite-8b", "dbrx-132b"]:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, OPTS)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(p.size for p in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.25, (arch, actual, analytic)
+
+
+def test_full_config_param_counts():
+    """Full configs match their published scale (analytic; no allocation)."""
+    expected = {
+        "granite-8b": (7e9, 10e9),
+        "minicpm-2b": (2e9, 3.2e9),
+        "glm4-9b": (8e9, 11e9),
+        "phi4-mini-3.8b": (3e9, 5e9),
+        "dbrx-132b": (110e9, 150e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "phi-3-vision-4.2b": (3.3e9, 5e9),
+        "xlstm-350m": (0.25e9, 0.6e9),
+        "whisper-tiny": (0.02e9, 0.08e9),
+        "zamba2-2.7b": (2e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+    # MoE active params
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.active_param_count() < 0.2 * q.param_count()

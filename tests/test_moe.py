@@ -1,0 +1,98 @@
+"""Property tests for the grouped MoE dispatch (GSPMD-canonical form)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import layers as L
+
+
+def make_moe(key, d, E, ff):
+    return L.init_moe(key, d, E, ff, jnp.float32)
+
+
+class TestGroupedDispatch:
+    def test_matches_ungrouped_when_capacity_ample(self):
+        """With capacity >> tokens/expert, grouping must not change results:
+        every token reaches its experts regardless of group boundaries."""
+        key = jax.random.PRNGKey(0)
+        d, E, ff = 16, 4, 32
+        p = make_moe(key, d, E, ff)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d)) * 0.5
+        outs = []
+        for gs in (8, 16, 32):
+            outs.append(
+                L.moe_fwd(p, x, top_k=2, capacity_factor=8.0, group_size=gs)
+            )
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_single_expert_equals_dense_mlp(self):
+        """E=1, top_k=1: MoE must reduce to the (SwiGLU) expert applied to
+        every token with gate weight 1."""
+        key = jax.random.PRNGKey(0)
+        d, ff = 12, 24
+        p = make_moe(key, d, 1, ff)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, d)) * 0.5
+        out = L.moe_fwd(p, x, top_k=1, capacity_factor=4.0, group_size=8)
+        # manual dense expert
+        g = x @ p["w_gate"][0]
+        h = x @ p["w_in"][0]
+        expect = (jax.nn.silu(g) * h) @ p["w_out"][0]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_capacity_drops_tokens(self):
+        """With capacity_factor ~0, (almost) all tokens are dropped and the
+        output collapses to ~zero."""
+        key = jax.random.PRNGKey(0)
+        p = make_moe(key, 8, 4, 16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+        out_full = L.moe_fwd(p, x, top_k=2, capacity_factor=8.0, group_size=64)
+        out_tiny = L.moe_fwd(p, x, top_k=2, capacity_factor=0.01, group_size=64)
+        assert float(jnp.abs(out_tiny).mean()) < float(jnp.abs(out_full).mean())
+
+    @given(
+        tokens=st.sampled_from([8, 16, 32]),
+        E=st.sampled_from([2, 4, 8]),
+        top_k=st.sampled_from([1, 2]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_combine_weights_bounded(self, tokens, E, top_k):
+        """Output norm is bounded by the max expert output norm: combine
+        weights per token sum to <= 1 (softmax renormalized over kept)."""
+        key = jax.random.PRNGKey(tokens * 31 + E)
+        p = make_moe(key, 8, E, 16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, 8))
+        out = L.moe_fwd(p, x, top_k=top_k, capacity_factor=8.0, group_size=tokens)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_aux_loss_balanced_router_is_one(self):
+        """A perfectly uniform router gives aux ~ 1 (Switch normalization)."""
+        d, E = 8, 4
+        key = jax.random.PRNGKey(0)
+        p = make_moe(key, d, E, 16)
+        p = dict(p)
+        p["router"] = jnp.zeros((d, E))  # uniform probs
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, d))
+        _, aux = L.moe_fwd(p, x, top_k=1, capacity_factor=4.0, group_size=32,
+                           return_aux=True)
+        assert 0.9 < float(aux) < 1.1
+
+    def test_grad_flows_to_experts_and_router(self):
+        key = jax.random.PRNGKey(0)
+        p = make_moe(key, 8, 4, 16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+
+        def loss(p):
+            return jnp.sum(L.moe_fwd(p, x, top_k=2, capacity_factor=2.0,
+                                     group_size=16) ** 2)
+
+        g = jax.grad(loss)(p)
+        for name in ("router", "w_gate", "w_in", "w_out"):
+            assert float(jnp.abs(g[name]).max()) > 0.0, name

@@ -1,0 +1,87 @@
+"""Tests for the calibrated BusBw / step-time model (paper §4 encoding)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import JobSpec, ModelSpec, build_comm_matrix, simulate_step_time
+from repro.core.netmodel import GB, MB, NetModel
+
+
+@pytest.fixture
+def net():
+    return NetModel()
+
+
+class TestBusBw:
+    def test_collective_saturation_curve(self, net):
+        """Fig. 4a: collectives need ~256MB to approach peak."""
+        b64 = net.collective_busbw(64 * MB, 1)
+        b256 = net.collective_busbw(256 * MB, 1)
+        b2g = net.collective_busbw(2 * GB, 1)
+        assert b64 < b256 < b2g
+        assert b256 / net.cfg.peak_busbw > 0.8
+        assert net.collective_busbw(1 * MB, 1) / net.cfg.peak_busbw < 0.05
+
+    def test_p2p_saturates_small(self, net):
+        """Fig. 4a: ~2MB saturates send-recv."""
+        assert net.p2p_busbw(2 * MB, 1) / net.cfg.peak_busbw > 0.85
+
+    def test_degradation_caps(self, net):
+        """Fig. 4b/c: -17% collective, -70% P2P at max spread; monotone."""
+        c = [net.collective_busbw(2 * GB, s) for s in (1, 2, 3, 5)]
+        p = [net.p2p_busbw(32 * MB, s) for s in (1, 2, 3, 5)]
+        assert c[0] > c[1] > c[2] == c[3]
+        assert p[0] > p[1] > p[2] == p[3]
+        assert 1 - c[2] / c[0] == pytest.approx(0.17)
+        assert 1 - p[2] / p[0] == pytest.approx(0.70)
+
+    @given(spread=st.integers(1, 8), size_mb=st.floats(0.1, 4096))
+    @settings(max_examples=50, deadline=None)
+    def test_property_bandwidth_positive_and_bounded(self, spread, size_mb):
+        net = NetModel()
+        for fn in (net.collective_busbw, net.p2p_busbw):
+            bw = fn(size_mb * MB, spread)
+            assert 0 < bw <= net.cfg.peak_busbw
+
+    def test_interference_bounds(self, net):
+        rng = np.random.default_rng(0)
+        for s in (1, 3, 6):
+            x = net.interference(s, rng)
+            assert 1.0 <= x <= 1.0 + net.cfg.interference_max + 1e-9
+
+
+class TestStepTime:
+    def _comm(self, pp=8, moe=False):
+        if moe:
+            m = ModelSpec(name="moe", hidden=4096, layers=32, vocab=50304,
+                          seq_len=2048, global_batch=512, micro_batch=1,
+                          n_experts=16, top_k=4, d_expert=8192)
+        else:
+            m = ModelSpec(name="d", hidden=4096, layers=32, vocab=50304,
+                          seq_len=2048, global_batch=512, micro_batch=1,
+                          d_ff=16384)
+        return build_comm_matrix(JobSpec(n_gpus=64 * 8, tp=8, pp=pp, model=m))
+
+    def test_spread_slows_step(self):
+        comm = self._comm()
+        t1 = simulate_step_time(comm, 1, 1).total
+        t3 = simulate_step_time(comm, 3, 3).total
+        assert t3 > t1
+
+    def test_comm_fraction_in_paper_band(self):
+        """Fig. 1a: 30-50% of production step time is communication."""
+        comm = self._comm()
+        bd = simulate_step_time(comm, 2, 2)
+        assert 0.05 < bd.comm_fraction() < 0.6
+
+    def test_pp1_has_no_pp_time(self):
+        comm = self._comm(pp=1)
+        bd = simulate_step_time(comm, 2, 1)
+        assert bd.pp_exposed == 0.0
+
+    def test_moe_has_ep_time(self):
+        bd = simulate_step_time(self._comm(moe=True), 1, 1)
+        assert bd.ep_exposed > 0.0
+        assert simulate_step_time(self._comm(moe=False), 1, 1).ep_exposed == 0.0

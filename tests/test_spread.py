@@ -1,0 +1,91 @@
+"""Unit + property tests for the spread metric (Eq. 2/3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Cluster, Placement, max_spreads, weighted_spread
+from repro.core.spread import distance_onehot, group_spread, mean_spreads
+
+
+def onehot(assignments, k):
+    v = np.zeros((len(assignments), k))
+    v[np.arange(len(assignments)), assignments] = 1
+    return v
+
+
+class TestDistanceOnehot:
+    def test_identical_vectors_distance_zero(self):
+        assert distance_onehot(onehot([2, 2, 2], 5)) == 0
+
+    def test_two_pods_distance_two(self):
+        # Eq. 3: positions 0 and 1 both differ somewhere -> D = 2.
+        assert distance_onehot(onehot([0, 1], 3)) == 2
+
+    def test_three_pods(self):
+        assert distance_onehot(onehot([0, 1, 2], 4)) == 3
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            distance_onehot(np.zeros(3))
+
+
+class TestGroupSpread:
+    @given(st.lists(st.integers(0, 7), min_size=1, max_size=32))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_onehot_distance(self, pods):
+        """group_spread is exactly Eq. 3 evaluated on one-hot encodings."""
+        assert group_spread(np.array(pods)) == distance_onehot(onehot(pods, 8))
+
+    @given(st.lists(st.integers(0, 7), min_size=1, max_size=32))
+    @settings(max_examples=100, deadline=None)
+    def test_bounds(self, pods):
+        s = group_spread(np.array(pods))
+        assert 0 <= s <= len(set(pods))
+        assert (s == 0) == (len(set(pods)) == 1)
+
+    @given(st.lists(st.integers(0, 7), min_size=2, max_size=32), st.integers(0, 7))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_under_consolidation(self, pods, target):
+        """Moving every member into one pod never increases spread."""
+        before = group_spread(np.array(pods))
+        after = group_spread(np.array([target] * len(pods)))
+        assert after <= before or before == 0
+
+
+class TestPlacement:
+    def test_shape_validation(self, small_comm, cluster_i):
+        with pytest.raises(ValueError):
+            Placement(small_comm, np.arange(4).reshape(2, 2), cluster_i)
+
+    def test_duplicate_node_rejected(self, small_comm, cluster_i):
+        a = np.zeros(small_comm.shape, dtype=int)  # all cells -> node 0
+        with pytest.raises(ValueError):
+            Placement(small_comm, a, cluster_i)
+
+    def test_single_pod_zero_spread(self, small_comm):
+        cluster = Cluster.uniform(1, 32)
+        a = np.arange(small_comm.n_cells).reshape(small_comm.shape)
+        p = Placement(small_comm, a, cluster)
+        assert max_spreads(p) == (0, 0)
+        assert weighted_spread(p, 0.5) == 0.0
+
+    def test_weighted_spread_requires_alpha_beta_sum_one(self, small_comm, cluster_i):
+        a = np.arange(small_comm.n_cells).reshape(small_comm.shape)
+        p = Placement(small_comm, a, cluster_i)
+        with pytest.raises(ValueError):
+            weighted_spread(p, 0.5, 0.7)
+
+    def test_known_spread(self, small_comm):
+        """6x2 matrix, rows 0-2 in pod 0, rows 3-5 in pod 1: PP groups local
+        (spread 0), DP groups span both pods (spread 2)."""
+        cluster = Cluster.uniform(2, 12)
+        a = np.array([[0, 1], [2, 3], [4, 5], [12, 13], [14, 15], [16, 17]])
+        p = Placement(small_comm, a, cluster)
+        dp_s, pp_s = max_spreads(p)
+        assert (dp_s, pp_s) == (2, 0)
+        assert weighted_spread(p, alpha=1.0, beta=0.0) == 2.0
+        assert weighted_spread(p, alpha=0.0, beta=1.0) == 0.0
+        dpm, ppm = mean_spreads(p)
+        assert dpm == 2.0 and ppm == 0.0
