@@ -18,10 +18,10 @@ from repro.core import (
     Cluster,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
-    gpu_packing,
+    get_scheduler,
     max_spreads,
-    schedule_mip,
 )
 from repro.core.netmodel import NetModel
 
@@ -51,8 +51,9 @@ def run() -> list[tuple]:
     cluster = Cluster.uniform(16, 125)
     comm = build_comm_matrix(JobSpec(n_gpus=1200 * 8, tp=8, pp=8, model=MOE))
     t0 = time.perf_counter()
-    ours = schedule_mip(comm, cluster, alpha=0.3).placement
-    base = gpu_packing(comm, cluster)
+    request = ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3)
+    ours = get_scheduler("mip").schedule(request).placement
+    base = get_scheduler("gpu-packing").schedule(request).placement
     dp_o, pp_o = max_spreads(ours)
     dp_b, pp_b = max_spreads(base)
     # ensure the baseline has some spread to improve upon (big job -> yes)

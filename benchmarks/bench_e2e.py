@@ -16,9 +16,9 @@ from repro.core import (
     Cluster,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
-    gpu_packing,
-    schedule_mip,
+    get_scheduler,
     throughput_of_placement,
 )
 
@@ -50,8 +50,10 @@ def _compare(model, cluster, n_nodes, tp, pp, alpha, fragment_seed=None,
                           size=min(int(fragment_frac * cluster.n_nodes), max_busy),
                           replace=False, p=weights)
         cluster.allocate([int(b) for b in busy])
-    ours = schedule_mip(comm, cluster, alpha=alpha).placement
-    base = gpu_packing(comm, cluster)  # MegaScale-style consolidation
+    request = ScheduleRequest(comm=comm, cluster=cluster, alpha=alpha)
+    ours = get_scheduler("mip").schedule(request).placement
+    # MegaScale-style consolidation
+    base = get_scheduler("gpu-packing").schedule(request).placement
     t_ours = throughput_of_placement(ours, steps=5)
     t_base = throughput_of_placement(base, steps=5)
     gain = 100.0 * (t_ours["tokens_per_s"] / t_base["tokens_per_s"] - 1.0)

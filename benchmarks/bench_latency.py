@@ -9,7 +9,8 @@ import time
 
 import numpy as np
 
-from repro.core import Cluster, JobSpec, ModelSpec, build_comm_matrix, schedule_mip
+from repro.core import (Cluster, JobSpec, ModelSpec, ScheduleRequest,
+                        build_comm_matrix, get_scheduler)
 from repro.core.mip import _counts_objective
 
 MODEL7B = ModelSpec(
@@ -75,7 +76,9 @@ def run() -> list[tuple]:
         dp = n_nodes * 8 // tp // pp
         comm = build_comm_matrix(JobSpec(n_gpus=n_nodes * 8, tp=tp, pp=pp, model=MODEL7B))
         t0 = time.perf_counter()
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3)
+        )
         dt = time.perf_counter() - t0
         rows.append((f"latency_arnold_{n_nodes}nodes_ms", dt * 1e6,
                      round(dt * 1e3, 1)))

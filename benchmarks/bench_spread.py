@@ -12,12 +12,13 @@ import time
 import numpy as np
 
 from repro.core import (
-    ALL_BASELINES,
     Cluster,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
-    schedule_mip,
+    get_scheduler,
+    list_schedulers,
     weighted_spread,
 )
 
@@ -42,11 +43,16 @@ def _one(setting: str, alpha: float, fragment: float, seed: int = 0):
         )
         cluster.allocate([int(b) for b in busy])
     comm = build_comm_matrix(JobSpec(n_gpus=dp * tp * pp, tp=tp, pp=pp, model=MODEL7B))
-    ours = weighted_spread(schedule_mip(comm, cluster, alpha=alpha).placement, alpha)
+    request = ScheduleRequest(comm=comm, cluster=cluster, alpha=alpha, seed=seed)
+    ours = weighted_spread(get_scheduler("mip").schedule(request).placement, alpha)
     base = {}
-    for name, fn in ALL_BASELINES.items():
+    for name in list_schedulers():
+        if name == "mip":
+            continue
         try:
-            base[name] = weighted_spread(fn(comm, cluster), alpha)
+            base[name] = weighted_spread(
+                get_scheduler(name).schedule(request).placement, alpha
+            )
         except Exception:
             base[name] = float("inf")
     best = min(base.values())

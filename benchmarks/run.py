@@ -36,6 +36,11 @@ ALL = {
 
 def main() -> None:
     names = sys.argv[1:] or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        print(f"unknown benchmark(s) {unknown}; available: {list(ALL)}",
+              file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

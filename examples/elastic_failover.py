@@ -15,11 +15,12 @@ import tempfile
 from repro.core import (
     Cluster,
     FailureManager,
+    FallbackChain,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
     max_spreads,
-    schedule_mip,
 )
 from repro.configs import get_config
 from repro.data import SyntheticDataset
@@ -53,9 +54,11 @@ def scheduling_layer():
     model = ModelSpec(name="7b", hidden=4096, layers=32, vocab=50304,
                       seq_len=2048, global_batch=512, d_ff=16384)
     comm = build_comm_matrix(JobSpec(n_gpus=32 * 8, tp=4, pp=4, model=model))
-    res = schedule_mip(comm, cluster, alpha=0.3)
+    # MILP first; degrade to topo-aware if it cannot produce a placement.
+    scheduler = FallbackChain("mip", "topo-aware")
+    res = scheduler.schedule(ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
     cluster.allocate(res.placement.node_ids())
-    print(f"placed 32 nodes, spreads={max_spreads(res.placement)}")
+    print(f"placed 32 nodes via {res.method}, spreads={max_spreads(res.placement)}")
 
     fm = FailureManager(res.placement, cluster, backup_frac=0.1)
     print(f"backups reserved: {fm.backup_count()}")
@@ -68,6 +71,18 @@ def scheduling_layer():
               f"spreads now ({ev.dp_spread_after}, {ev.pp_spread_after})")
     assert all(e.kind in ("backup", "local", "cross-pod") for e in fm.events)
     print("repair events:", [e.kind for e in fm.events])
+
+    # Constrained re-placement (new with the unified API): plan a fresh
+    # placement that avoids every node that has ever failed, falling back
+    # to topo-aware if the constrained MILP is infeasible.
+    cluster.release(res.placement.node_ids())
+    failed = frozenset(v for v in victims)
+    re_res = scheduler.schedule(ScheduleRequest(
+        comm=comm, cluster=cluster, alpha=0.3, excluded_nodes=failed,
+    ))
+    assert not (set(re_res.placement.node_ids()) & failed)
+    print(f"re-placed around {len(failed)} failed nodes via {re_res.method}, "
+          f"spreads={max_spreads(re_res.placement)}")
 
 
 if __name__ == "__main__":

@@ -22,10 +22,10 @@ from repro.core import (
     Cluster,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
-    gpu_packing,
-    max_spreads,
-    schedule_mip,
+    get_scheduler,
+    list_schedulers,
 )
 from repro.configs import get_config
 from repro.data import SyntheticDataset
@@ -54,12 +54,15 @@ def main():
     print(f"comm matrix {comm.shape}; v_d={comm.v_d/2**20:.0f} MiB "
           f"v_p={comm.v_p/2**20:.1f} MiB; affinity alpha={alpha:.2f} unit={unit}")
 
-    # -- 3. MILP placement vs baseline ---------------------------------------
-    res = schedule_mip(comm, cluster, alpha=alpha, unit=unit)
-    base = gpu_packing(comm, cluster)
-    print(f"Arnold spreads (dp, pp): {max_spreads(res.placement)} "
+    # -- 3. MILP placement vs baseline, via the unified scheduler API --------
+    request = ScheduleRequest(comm=comm, cluster=cluster, alpha=alpha,
+                              beta=beta, unit=unit)
+    print(f"registered schedulers: {list_schedulers()}")
+    res = get_scheduler("mip").schedule(request)
+    base = get_scheduler("gpu-packing").schedule(request)
+    print(f"Arnold spreads (dp, pp): ({res.dp_spread}, {res.pp_spread}) "
           f"[{res.method}, {res.solve_seconds*1e3:.1f} ms]")
-    print(f"packing spreads (dp, pp): {max_spreads(base)}")
+    print(f"packing spreads (dp, pp): ({base.dp_spread}, {base.pp_spread})")
 
     # -- 4./5. mesh from the placement ---------------------------------------
     mesh = make_arnold_mesh(res.placement, tp=job.tp, shape=(8, 8),

@@ -7,6 +7,8 @@ The paper's primary contribution, as a composable library:
 * :mod:`repro.core.spread`       -- spread metric + Eq. 2 objective
 * :mod:`repro.core.mip`          -- the MILP scheduler (Eq. 4-10)
 * :mod:`repro.core.baselines`    -- best-fit / random-fit / gpu-packing / topo-aware
+* :mod:`repro.core.scheduler`    -- unified Scheduler API: request/result
+  contract, policy registry, fallback chains
 * :mod:`repro.core.affinity`     -- characterization DB -> (alpha, beta)
 * :mod:`repro.core.queue`        -- Algorithm 1 reservation policy
 * :mod:`repro.core.jct`          -- GBM job-completion-time predictor
@@ -34,6 +36,15 @@ from repro.core.mip import Infeasible, MipResult, schedule_mip
 from repro.core.netmodel import NetModel, NetModelConfig, simulate_step_time
 from repro.core.queue import Job, QueuePolicy
 from repro.core.rank_assign import device_permutation, logical_to_physical_gpus
+from repro.core.scheduler import (
+    FallbackChain,
+    ScheduleRequest,
+    ScheduleResult,
+    Scheduler,
+    get_scheduler,
+    list_schedulers,
+    register_scheduler,
+)
 from repro.core.simulator import TraceSimulator, poisson_trace, throughput_of_placement
 from repro.core.spread import Placement, max_spreads, weighted_spread
 from repro.core.topology import Cluster, Minipod, Node

@@ -13,9 +13,16 @@
 
 Each baseline returns a :class:`Placement` so all algorithms are scored by
 the same Eq. 2 weighted-spread metric.
+
+The public functions here are thin shims over the unified scheduler registry
+(:mod:`repro.core.scheduler`); the ``_``-prefixed implementations are what
+the registry wraps.  Prefer ``get_scheduler(name).schedule(request)`` in new
+code -- it adds excluded/reserved-node masking and a uniform result type.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -47,7 +54,7 @@ def _take_from_pods(cluster: Cluster, pod_order: list[int], n: int) -> list[int]
 
 
 # ---------------------------------------------------------------------------
-def best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
+def _best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
     """Fill minipods with the *least* remaining free nodes first."""
     free = cluster.free_capacities()
     pods = sorted(
@@ -57,7 +64,7 @@ def best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
     return _materialize(comm, cluster, _take_from_pods(cluster, pods, comm.n_cells))
 
 
-def gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
+def _gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
     """Consolidate the job into the fewest minipods (largest-free-first)."""
     free = cluster.free_capacities()
     pods = sorted(
@@ -67,10 +74,9 @@ def gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
     return _materialize(comm, cluster, _take_from_pods(cluster, pods, comm.n_cells))
 
 
-def random_fit(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
+def _random_fit(comm: CommMatrix, cluster: Cluster, rng: np.random.Generator) -> Placement:
     """Balanced random assignment: nodes drawn round-robin from minipods in
     random order, so the load lands evenly (fair) but topology-blind."""
-    rng = np.random.default_rng(seed)
     free_lists = {
         j: list(rng.permutation(cluster.free_in_minipod(j)))
         for j in range(cluster.n_minipods)
@@ -178,7 +184,7 @@ def _fm_bipartition(
     return part_a, part_b
 
 
-def topo_aware(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
+def _topo_aware(comm: CommMatrix, cluster: Cluster) -> Placement:
     """Hierarchical static mapping: recursively bi-partition the physical
     graph (minipods, by free capacity) and map the job graph onto the two
     halves with an FM min-cut of matching sizes [2, 10, 11]."""
@@ -204,7 +210,7 @@ def topo_aware(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
         # ensure part B fits too
         cap_b = sum(free[j] for j in pods_b)
         size_a = max(size_a, len(cells) - cap_b)
-        part_a, part_b = _fm_bipartition(adj, cells, size_a, seed=seed)
+        part_a, part_b = _fm_bipartition(adj, cells, size_a)
         recurse(pods_a, part_a)
         recurse(pods_b, part_b)
 
@@ -219,6 +225,45 @@ def topo_aware(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
         for v, nid in zip(cells, nodes):
             assignment[v // n_cols, v % n_cols] = nid
     return Placement(comm=comm, assignment=assignment, cluster=cluster)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points: thin shims over the scheduler registry.
+# ---------------------------------------------------------------------------
+
+def _via_registry(name: str, comm: CommMatrix, cluster: Cluster, **req_kw) -> Placement:
+    from repro.core.scheduler import ScheduleRequest, get_scheduler
+
+    request = ScheduleRequest(comm=comm, cluster=cluster, **req_kw)
+    return get_scheduler(name).schedule(request).placement
+
+
+def best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
+    """Best-fit baseline; see :func:`_best_fit` for the algorithm."""
+    return _via_registry("best-fit", comm, cluster)
+
+
+def gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
+    """GPU-packing baseline; see :func:`_gpu_packing` for the algorithm."""
+    return _via_registry("gpu-packing", comm, cluster)
+
+
+def random_fit(
+    comm: CommMatrix,
+    cluster: Cluster,
+    seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
+) -> Placement:
+    """Random-fit baseline; reproducible via ``seed`` or an explicit ``rng``
+    (``rng`` wins when both are given)."""
+    return _via_registry("random-fit", comm, cluster, seed=seed, rng=rng)
+
+
+def topo_aware(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
+    """Topo-aware baseline; ``seed`` is accepted for API compatibility but
+    the FM partitioning is deterministic."""
+    del seed
+    return _via_registry("topo-aware", comm, cluster)
 
 
 ALL_BASELINES = {

@@ -17,10 +17,9 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.core.affinity import CharRecord
-from repro.core.baselines import random_fit
 from repro.core.comm_matrix import JobSpec, build_comm_matrix
-from repro.core.mip import schedule_mip
 from repro.core.netmodel import NetModel
+from repro.core.scheduler import ScheduleRequest, get_scheduler
 from repro.core.simulator import throughput_of_placement
 from repro.core.topology import Cluster
 
@@ -36,14 +35,19 @@ def characterize(
     net = net or NetModel()
     comm = build_comm_matrix(job)
 
+    mip = get_scheduler("mip")
     # Figure 3b: DP-aligned -- each DP group (column) consolidated.
-    dp_aligned = schedule_mip(comm, cluster_factory(), alpha=0.0, beta=1.0,
-                              unit="dp").placement
+    dp_aligned = mip.schedule(ScheduleRequest(
+        comm=comm, cluster=cluster_factory(), alpha=0.0, beta=1.0, unit="dp",
+    )).placement
     # Figure 3c: PP-aligned -- each PP group (row) consolidated.
-    pp_aligned = schedule_mip(comm, cluster_factory(), alpha=0.0, beta=1.0,
-                              unit="pp").placement
+    pp_aligned = mip.schedule(ScheduleRequest(
+        comm=comm, cluster=cluster_factory(), alpha=0.0, beta=1.0, unit="pp",
+    )).placement
     # Naive: balanced random (the misaligned Figure 3a situation).
-    naive = random_fit(comm, cluster_factory(), seed=0)
+    naive = get_scheduler("random-fit").schedule(ScheduleRequest(
+        comm=comm, cluster=cluster_factory(), seed=0,
+    )).placement
 
     t_dp = throughput_of_placement(dp_aligned, net=net, steps=steps, **step_kw)
     t_pp = throughput_of_placement(pp_aligned, net=net, steps=steps, **step_kw)

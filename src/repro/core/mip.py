@@ -401,26 +401,32 @@ def schedule_mip(
     (matrix row) as one unit -- minimizing T consolidates PP chains while
     ``alpha * sum_j y_j`` consolidates the orthogonal DP groups; ``"dp"``
     swaps the roles (used when DP communication dominates, Appendix E).
-    """
-    if beta is None:
-        beta = 1.0 - alpha
-    if unit not in ("pp", "dp"):
-        raise ValueError(f"unit must be pp|dp, got {unit}")
-    n_groups = comm.n_rows if unit == "pp" else comm.n_cols
-    group_size = comm.n_cols if unit == "pp" else comm.n_rows
-    free = np.array(cluster.free_capacities(), dtype=float)
 
-    counts, obj, dt, method = _solve_counts(
-        group_size, n_groups, free, alpha, beta, integral_nodes, time_limit,
-        use_greedy_bound=use_greedy_bound,
+    Thin shim over the unified scheduler registry: equivalent to
+    ``get_scheduler("mip").schedule(ScheduleRequest(...))`` (see
+    :mod:`repro.core.scheduler`), repackaged as a :class:`MipResult`.
+    """
+    from repro.core.scheduler import ScheduleRequest, get_scheduler
+
+    request = ScheduleRequest(
+        comm=comm,
+        cluster=cluster,
+        alpha=alpha,
+        beta=beta,
+        unit=unit,
+        time_budget=time_limit,
+        options={
+            "integral_nodes": integral_nodes,
+            "use_greedy_bound": use_greedy_bound,
+        },
     )
-    placement = _counts_to_placement(comm, cluster, counts, unit)
+    res = get_scheduler("mip").schedule(request)
     return MipResult(
-        placement=placement,
-        objective=obj,
-        n_pods_used=int((counts.sum(axis=0) > 0).sum()),
-        max_unit_spread=int(max((row > 0).sum() for row in counts)),
-        solve_seconds=dt,
-        counts=counts,
-        method=method,
+        placement=res.placement,
+        objective=res.objective,
+        n_pods_used=res.stats["n_pods_used"],
+        max_unit_spread=res.stats["max_unit_spread"],
+        solve_seconds=res.solve_seconds,
+        counts=res.stats["counts"],
+        method=res.method,
     )

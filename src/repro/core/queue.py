@@ -22,7 +22,12 @@ import numpy as np
 
 from repro.core.comm_matrix import CommMatrix
 from repro.core.jct import JCTPredictor
-from repro.core.mip import Infeasible, MipResult, schedule_mip
+from repro.core.scheduler import (
+    ScheduleRequest,
+    ScheduleResult,
+    Scheduler,
+    get_scheduler,
+)
 from repro.core.topology import Cluster
 
 
@@ -53,7 +58,7 @@ class PlannedLPJ:
     alpha: float
     beta: float
     unit: str = "pp"
-    result: Optional[MipResult] = None
+    result: Optional[ScheduleResult] = None
 
     @property
     def reserved_nodes(self) -> set[int]:
@@ -72,25 +77,31 @@ class QueuePolicy:
         interval: float = 60.0,
         reserve: bool = True,
         use_jct: bool = True,
+        scheduler: "str | Scheduler" = "mip",
     ):
         self.cluster = cluster
         self.jct = jct_predictor
         self.interval = interval
         self.reserve = reserve
         self.use_jct = use_jct
+        self.scheduler = get_scheduler(scheduler)
         self.lpj: Optional[PlannedLPJ] = None
         self.queue: list[tuple[tuple, Job]] = []  # heap by sort_key
         self.running: dict[int, Job] = {}
 
     # ------------------------------------------------------------------ LPJ
     def plan_lpj(self, comm: CommMatrix, arrival: float, alpha: float,
-                 beta: float | None = None, unit: str = "pp") -> MipResult:
-        """Solve the MIP now and reserve the nodes for the imminent LPJ.
+                 beta: float | None = None, unit: str = "pp",
+                 scheduler: "str | Scheduler | None" = None) -> ScheduleResult:
+        """Solve the placement now and reserve the nodes for the imminent LPJ.
 
-        The MIP is solved against the cluster as if empty-of-preemptables:
-        reservation semantics are strong (unlike the best-effort
-        reserving-and-packing baseline, Appendix H)."""
+        The policy's scheduler (or the per-call ``scheduler`` override --
+        a registry name, instance, or fallback chain) runs against the
+        cluster as if empty-of-preemptables: reservation semantics are
+        strong (unlike the best-effort reserving-and-packing baseline,
+        Appendix H)."""
         beta = 1.0 - alpha if beta is None else beta
+        sched = self.scheduler if scheduler is None else get_scheduler(scheduler)
         snapshot = self.cluster.snapshot_free()
         occupied_by_jobs = [
             n for j in self.running.values() for n in j.nodes
@@ -99,7 +110,10 @@ class QueuePolicy:
         # plans hours ahead, so occupied nodes will have drained by arrival.
         self.cluster.release(occupied_by_jobs)
         try:
-            result = schedule_mip(comm, self.cluster, alpha, beta, unit=unit)
+            result = sched.schedule(ScheduleRequest(
+                comm=comm, cluster=self.cluster, alpha=alpha, beta=beta,
+                unit=unit,
+            ))
         finally:
             self.cluster.allocate(occupied_by_jobs)
             assert self.cluster.snapshot_free() == snapshot

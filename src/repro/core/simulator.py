@@ -52,11 +52,14 @@ class TraceSimulator:
         self,
         jobs: list[Job],
         t_end: float,
-        lpj_plan: Optional[tuple[CommMatrix, float, float, str]] = None,
+        lpj_plan: Optional[tuple] = None,
         plan_at: float = 0.0,
     ) -> SimResult:
         """Replay ``jobs``; if ``lpj_plan=(comm, arrival, alpha, unit)`` is
-        given, the LPJ is planned at ``plan_at`` and admitted at arrival."""
+        given, the LPJ is planned at ``plan_at`` and admitted at arrival.
+        An optional fifth element selects the scheduling policy for this
+        LPJ -- a registry name, chain spec ("mip,topo-aware"), or Scheduler
+        instance -- overriding the queue policy's default."""
         events: list[tuple[float, int, str, object]] = []
         eid = 0
 
@@ -72,8 +75,9 @@ class TraceSimulator:
             push(t, "tick", None)
             t += self.tick
         if lpj_plan is not None:
-            comm, arrival, alpha, unit = lpj_plan
-            push(plan_at, "plan", (comm, arrival, alpha, unit))
+            comm, arrival, alpha, unit, *rest = lpj_plan
+            scheduler = rest[0] if rest else None
+            push(plan_at, "plan", (comm, arrival, alpha, unit, scheduler))
             push(arrival, "lpj", None)
 
         series: list[TimePoint] = []
@@ -92,8 +96,9 @@ class TraceSimulator:
                 submit_time[job.job_id] = t
                 self.policy.submit(job)
             elif kind == "plan":
-                comm, arrival, alpha, unit = payload
-                self.policy.plan_lpj(comm, arrival, alpha, unit=unit)
+                comm, arrival, alpha, unit, scheduler = payload
+                self.policy.plan_lpj(comm, arrival, alpha, unit=unit,
+                                     scheduler=scheduler)
             elif kind == "lpj":
                 lpj_nodes, preempted = self.policy.admit_lpj(t)
                 preempted_n = len(preempted)

@@ -31,6 +31,10 @@ def main(argv=None):
                     help="dataxmodel for the sharded run")
     ap.add_argument("--arnold", action="store_true",
                     help="order mesh devices by the Arnold MILP placement")
+    ap.add_argument("--scheduler", default="mip",
+                    help="placement policy for --arnold: a registry name "
+                         "(see repro.core.list_schedulers()) or a comma-"
+                         "separated fallback chain, e.g. 'mip,topo-aware'")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -84,8 +88,8 @@ def main(argv=None):
     if args.devices:
         # sharded run: optionally Arnold-ordered mesh
         from repro.core import (
-            CharacterizationDB, Cluster, JobSpec, ModelSpec, build_comm_matrix,
-            schedule_mip,
+            CharacterizationDB, Cluster, JobSpec, ModelSpec, ScheduleRequest,
+            build_comm_matrix, get_scheduler,
         )
         from repro.launch.mesh import make_arnold_mesh, mesh_group_spread
         from repro.parallel import sharding as shd
@@ -103,10 +107,12 @@ def main(argv=None):
             job = JobSpec(n_gpus=d * m, tp=min(m, 8), pp=1, model=mspec)
             comm = build_comm_matrix(job)
             alpha, beta, unit = CharacterizationDB().affinity_for(comm)
-            res = schedule_mip(comm, cluster, alpha=alpha, unit=unit)
+            res = get_scheduler(args.scheduler).schedule(ScheduleRequest(
+                comm=comm, cluster=cluster, alpha=alpha, beta=beta, unit=unit,
+            ))
             mesh = make_arnold_mesh(res.placement, tp=job.tp, shape=(d, m),
                                     axes=("data", "model"))
-            print(f"Arnold placement: pods={res.n_pods_used} "
+            print(f"Arnold placement [{res.method}]: pods={res.n_pods_used()} "
                   f"spread(data axis)={mesh_group_spread(mesh, 'data', 32)}")
         else:
             mesh = jax.make_mesh((d, m), ("data", "model"))

@@ -13,10 +13,11 @@ from repro.core import (
     Cluster,
     JobSpec,
     ModelSpec,
+    ScheduleRequest,
     build_comm_matrix,
     device_permutation,
+    get_scheduler,
     logical_to_physical_gpus,
-    schedule_mip,
 )
 
 MODEL = ModelSpec(name="m", hidden=1024, layers=8, vocab=5000, seq_len=128,
@@ -27,7 +28,8 @@ class TestRankAssign:
     def test_permutation_is_bijection(self):
         cluster = Cluster.uniform(4, 4)
         comm = build_comm_matrix(JobSpec(n_gpus=64, tp=4, pp=2, model=MODEL))
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
         perm = device_permutation(res.placement, tp=4)
         assert sorted(perm) == sorted(
             g for n in res.placement.node_ids() for g in range(n * 8, n * 8 + 8)
@@ -38,7 +40,8 @@ class TestRankAssign:
         (the paper's §2 invariant: TP on NVLink only)."""
         cluster = Cluster.uniform(4, 4)
         comm = build_comm_matrix(JobSpec(n_gpus=64, tp=4, pp=2, model=MODEL))
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
         phys = logical_to_physical_gpus(res.placement, tp=4)
         nodes = phys // 8
         assert (nodes == nodes[..., :1]).all()
@@ -48,7 +51,8 @@ class TestRankAssign:
         DP group should land inside one minipod."""
         cluster = Cluster.uniform(2, 12)
         comm = build_comm_matrix(JobSpec(n_gpus=96, tp=4, pp=2, model=MODEL))
-        res = schedule_mip(comm, cluster, alpha=1.0, unit="dp")
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=1.0, unit="dp"))
         phys = logical_to_physical_gpus(res.placement, tp=4)  # (pp, dp, tp)
         pods = phys // (8 * 12)
         for c in range(phys.shape[0]):
@@ -65,15 +69,16 @@ class TestArnoldMeshOnDevices:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
             import json
             import jax
-            from repro.core import (Cluster, JobSpec, ModelSpec,
-                                    build_comm_matrix, schedule_mip)
+            from repro.core import (Cluster, JobSpec, ModelSpec, ScheduleRequest,
+                                    build_comm_matrix, get_scheduler)
             from repro.launch.mesh import make_arnold_mesh, mesh_group_spread
 
             cluster = Cluster.uniform(4, 2)  # 4 pods x 2 nodes (16 devs/pod)
             model = ModelSpec(name="m", hidden=1024, layers=8, vocab=5000,
                               seq_len=128, global_batch=64, d_ff=4096)
             comm = build_comm_matrix(JobSpec(n_gpus=64, tp=8, pp=2, model=model))
-            res = schedule_mip(comm, cluster, alpha=0.0)
+            res = get_scheduler("mip").schedule(
+                ScheduleRequest(comm=comm, cluster=cluster, alpha=0.0))
             mesh = make_arnold_mesh(res.placement, tp=8, shape=(8, 8),
                                     axes=("data", "model"))
             naive = jax.make_mesh((8, 8), ("data", "model"))

@@ -11,11 +11,12 @@ from repro.core import (
     Job,
     JobSpec,
     QueuePolicy,
+    ScheduleRequest,
     TraceSimulator,
     build_comm_matrix,
+    get_scheduler,
     max_spreads,
     poisson_trace,
-    schedule_mip,
     synthetic_trace,
     throughput_of_placement,
 )
@@ -130,9 +131,9 @@ class TestSimulator:
     def test_throughput_improves_with_lower_spread(self, model7b, cluster_iii):
         job = JobSpec(n_gpus=46 * 8 * 8, tp=8, pp=8, model=model7b)
         comm = build_comm_matrix(job)
-        from repro.core import random_fit
-        good = schedule_mip(comm, cluster_iii, alpha=0.3).placement
-        bad = random_fit(comm, cluster_iii, seed=0)
+        req = ScheduleRequest(comm=comm, cluster=cluster_iii, alpha=0.3, seed=0)
+        good = get_scheduler("mip").schedule(req).placement
+        bad = get_scheduler("random-fit").schedule(req).placement
         tg = throughput_of_placement(good)
         tb = throughput_of_placement(bad)
         assert tg["tokens_per_s"] > tb["tokens_per_s"]
@@ -143,7 +144,8 @@ class TestFailureManager:
     def test_backup_promotion_keeps_spread(self, model7b):
         cluster = Cluster.uniform(4, 20)
         comm = build_comm_matrix(JobSpec(n_gpus=32 * 8, tp=4, pp=4, model=model7b))
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
         cluster.allocate(res.placement.node_ids())
         before = max_spreads(res.placement)
         fm = FailureManager(res.placement, cluster, backup_frac=0.1)
@@ -161,7 +163,8 @@ class TestFailureManager:
     def test_cross_pod_fallback(self, model7b):
         cluster = Cluster.uniform(2, 8)
         comm = build_comm_matrix(JobSpec(n_gpus=12 * 8, tp=4, pp=2, model=model7b))
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
         cluster.allocate(res.placement.node_ids())
         fm = FailureManager(res.placement, cluster, backup_frac=0.01)
         # exhaust backups then fail more nodes than local slack
@@ -177,7 +180,8 @@ class TestFailureManager:
     def test_straggler_swap(self, model7b):
         cluster = Cluster.uniform(4, 20)
         comm = build_comm_matrix(JobSpec(n_gpus=32 * 8, tp=4, pp=4, model=model7b))
-        res = schedule_mip(comm, cluster, alpha=0.3)
+        res = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
         cluster.allocate(res.placement.node_ids())
         fm = FailureManager(res.placement, cluster, backup_frac=0.2)
         slow = res.placement.node_ids()[5]

@@ -1,0 +1,94 @@
+"""Tests for logical-rank -> physical-GPU mapping (paper §6): permutation
+validity, TP locality, and round-trips with ``node_rank_order``."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    JobSpec,
+    ModelSpec,
+    ScheduleRequest,
+    build_comm_matrix,
+    device_permutation,
+    get_scheduler,
+    logical_to_physical_gpus,
+)
+from repro.core.rank_assign import node_rank_order
+from repro.core.topology import GPUS_PER_NODE
+
+MODEL = ModelSpec(name="m", hidden=1024, layers=8, vocab=5000, seq_len=128,
+                  global_batch=64, d_ff=4096)
+
+
+def _placement(tp: int, pp: int, n_nodes: int, scheduler: str = "mip"):
+    cluster = Cluster.uniform(4, max(2, n_nodes // 2))
+    comm = build_comm_matrix(
+        JobSpec(n_gpus=n_nodes * GPUS_PER_NODE, tp=tp, pp=pp, model=MODEL)
+    )
+    return get_scheduler(scheduler).schedule(
+        ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3)
+    ).placement
+
+
+class TestLogicalToPhysical:
+    @pytest.mark.parametrize("tp", [1, 2, 4, 8])
+    def test_bijective_over_gpus(self, tp):
+        p = _placement(tp=tp, pp=2, n_nodes=8)
+        phys = logical_to_physical_gpus(p, tp=tp)
+        flat = phys.ravel()
+        # every GPU of every placed node appears exactly once
+        expected = sorted(
+            g for n in p.node_ids()
+            for g in range(n * GPUS_PER_NODE, (n + 1) * GPUS_PER_NODE)
+        )
+        assert sorted(int(g) for g in flat) == expected
+        assert phys.shape == (p.comm.n_cols,
+                              p.comm.n_rows * (GPUS_PER_NODE // tp), tp)
+
+    @pytest.mark.parametrize("tp", [2, 4, 8])
+    def test_tp_ranks_contiguous_within_a_node(self, tp):
+        p = _placement(tp=tp, pp=2, n_nodes=8)
+        phys = logical_to_physical_gpus(p, tp=tp)
+        nodes = phys // GPUS_PER_NODE
+        # all TP ranks of one (pp, dp) replica live on one node...
+        assert (nodes == nodes[..., :1]).all()
+        # ...on consecutive local GPU ids (NVLink locality, §2)
+        local = phys % GPUS_PER_NODE
+        assert (np.diff(local, axis=-1) == 1).all()
+
+    def test_dp_replicas_of_a_cell_share_its_node(self):
+        tp = 2
+        p = _placement(tp=tp, pp=2, n_nodes=8)
+        phys = logical_to_physical_gpus(p, tp=tp)
+        reps = GPUS_PER_NODE // tp
+        n_rows, n_cols = p.comm.shape
+        for r in range(n_rows):
+            for c in range(n_cols):
+                hosted = phys[c, r * reps:(r + 1) * reps, :] // GPUS_PER_NODE
+                assert (hosted == int(p.assignment[r, c])).all()
+
+    @pytest.mark.parametrize("scheduler", ["mip", "topo-aware", "best-fit"])
+    def test_round_trip_with_node_rank_order(self, scheduler):
+        tp = 4
+        p = _placement(tp=tp, pp=2, n_nodes=8, scheduler=scheduler)
+        order = node_rank_order(p)
+        # node_rank_order is the row-major ravel of the assignment
+        assert (np.array(order).reshape(p.comm.shape) == p.assignment).all()
+        # and logical_to_physical agrees with it cell by cell
+        phys = logical_to_physical_gpus(p, tp=tp)
+        reps = GPUS_PER_NODE // tp
+        n_rows, n_cols = p.comm.shape
+        recovered = [
+            int(phys[c, r * reps, 0]) // GPUS_PER_NODE
+            for r in range(n_rows) for c in range(n_cols)
+        ]
+        assert recovered == order
+
+    def test_device_permutation_is_flat_ravel(self):
+        tp = 4
+        p = _placement(tp=tp, pp=2, n_nodes=8)
+        perm = device_permutation(p, tp=tp)
+        phys = logical_to_physical_gpus(p, tp=tp)
+        assert perm == [int(g) for g in phys.ravel()]
+        assert len(perm) == len(set(perm))

@@ -1,0 +1,247 @@
+"""Tests for the unified scheduler API: request/result contract, registry,
+and fallback chains (DESIGN.md §2.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    FallbackChain,
+    Infeasible,
+    ScheduleRequest,
+    ScheduleResult,
+    Scheduler,
+    get_scheduler,
+    list_schedulers,
+    max_spreads,
+    register_scheduler,
+    schedule_mip,
+    weighted_spread,
+)
+from repro.core.scheduler import _REGISTRY
+
+ALL_NAMES = ("mip", "best-fit", "random-fit", "gpu-packing", "topo-aware")
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert set(ALL_NAMES) <= set(list_schedulers())
+
+    def test_name_normalization(self):
+        assert get_scheduler("topo_aware") is get_scheduler("topo-aware")
+        assert get_scheduler("MIP") is get_scheduler("mip")
+        assert get_scheduler("milp") is get_scheduler("mip")  # alias
+
+    def test_instance_passthrough(self):
+        sched = get_scheduler("best-fit")
+        assert get_scheduler(sched) is sched
+
+    def test_unknown_name(self):
+        with pytest.raises(KeyError, match="available"):
+            get_scheduler("no-such-policy")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("mip", get_scheduler("mip"))
+
+    def test_register_and_overwrite(self):
+        probe = get_scheduler("best-fit")
+        try:
+            register_scheduler("probe-policy", probe)
+            assert get_scheduler("probe_policy") is probe
+            register_scheduler("probe-policy", get_scheduler("mip"), overwrite=True)
+            assert get_scheduler("probe-policy") is get_scheduler("mip")
+        finally:
+            _REGISTRY.pop("probe-policy", None)
+
+    def test_comma_spec_builds_chain(self):
+        chain = get_scheduler("mip,topo_aware")
+        assert isinstance(chain, FallbackChain)
+
+    def test_all_registered_satisfy_protocol(self):
+        for name in list_schedulers():
+            assert isinstance(get_scheduler(name), Scheduler)
+
+
+class TestContract:
+    @pytest.mark.parametrize("name", ALL_NAMES)
+    def test_schedule_returns_valid_result(self, name, small_comm, cluster_i):
+        res = get_scheduler(name).schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        assert isinstance(res, ScheduleResult)
+        ids = res.placement.node_ids()
+        assert len(ids) == small_comm.n_cells == len(set(ids))
+        assert all(cluster_i.is_free(n) for n in ids)
+        assert (res.dp_spread, res.pp_spread) == max_spreads(res.placement)
+        assert res.method and res.solve_seconds >= 0.0
+        assert res.n_pods_used() >= 1
+        assert res.weighted_spread(0.3) == pytest.approx(
+            weighted_spread(res.placement, 0.3)
+        )
+
+    @pytest.mark.parametrize("name", ALL_NAMES)
+    def test_infeasible_raises(self, name, small_comm):
+        tiny = Cluster.uniform(2, 2)  # 4 nodes < 12 needed
+        with pytest.raises(Infeasible):
+            get_scheduler(name).schedule(
+                ScheduleRequest(comm=small_comm, cluster=tiny)
+            )
+
+    def test_bad_unit_rejected(self, small_comm, cluster_i):
+        with pytest.raises(ValueError, match="unit"):
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, unit="tp")
+
+    def test_resolved_beta_defaults_to_complement(self, small_comm, cluster_i):
+        req = ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        assert req.resolved_beta() == pytest.approx(0.7)
+        req = ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3, beta=1.0)
+        assert req.resolved_beta() == 1.0
+
+    @pytest.mark.parametrize("name", ALL_NAMES)
+    def test_excluded_nodes_respected_and_restored(self, name, small_comm):
+        cluster = Cluster.uniform(4, 8)
+        excluded = frozenset(range(8))  # all of minipod 0
+        res = get_scheduler(name).schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster, excluded_nodes=excluded,
+        ))
+        assert not (set(res.placement.node_ids()) & excluded)
+        assert cluster.n_free == cluster.n_nodes  # mask fully undone
+
+    def test_reserved_nodes_masked_like_excluded(self, small_comm):
+        cluster = Cluster.uniform(4, 8)
+        reserved = frozenset(range(8, 16))
+        res = get_scheduler("best-fit").schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster, reserved_nodes=reserved,
+        ))
+        assert not (set(res.placement.node_ids()) & reserved)
+        assert cluster.n_free == cluster.n_nodes
+
+    def test_masking_can_make_request_infeasible(self, small_comm):
+        cluster = Cluster.uniform(2, 8)  # 16 nodes, need 12
+        with pytest.raises(Infeasible):
+            get_scheduler("mip").schedule(ScheduleRequest(
+                comm=small_comm, cluster=cluster,
+                excluded_nodes=frozenset(range(8)),
+            ))
+        assert cluster.n_free == cluster.n_nodes
+
+
+class TestShimEquivalence:
+    def test_schedule_mip_shim_matches_registry(self, small_comm, cluster_i):
+        via_shim = schedule_mip(small_comm, cluster_i, alpha=0.3)
+        via_api = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        assert (via_shim.placement.assignment == via_api.placement.assignment).all()
+        assert via_shim.objective == pytest.approx(via_api.objective)
+        assert via_shim.method == via_api.method
+        assert via_shim.n_pods_used == via_api.stats["n_pods_used"]
+
+    def test_random_fit_seed_vs_rng(self, small_comm, cluster_i):
+        from repro.core import random_fit
+
+        by_seed = random_fit(small_comm, cluster_i, seed=11)
+        by_rng = random_fit(small_comm, cluster_i, rng=np.random.default_rng(11))
+        via_api = get_scheduler("random-fit").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, seed=11)
+        )
+        assert (by_seed.assignment == by_rng.assignment).all()
+        assert (by_seed.assignment == via_api.placement.assignment).all()
+
+    def test_random_fit_seeds_differ(self, small_comm, cluster_i):
+        from repro.core import random_fit
+
+        a = random_fit(small_comm, cluster_i, seed=0)
+        b = random_fit(small_comm, cluster_i, seed=1)
+        assert not (a.assignment == b.assignment).all()
+
+
+class _AlwaysInfeasible:
+    name = "always-infeasible"
+
+    def schedule(self, request):
+        raise Infeasible("synthetic failure")
+
+
+class TestFallbackChain:
+    def test_degrades_to_next_link(self, small_comm, cluster_i):
+        chain = FallbackChain(_AlwaysInfeasible(), "topo-aware")
+        res = chain.schedule(ScheduleRequest(comm=small_comm, cluster=cluster_i))
+        assert res.method == "topo-aware"
+        assert res.stats["fallbacks"][0][0] == "always-infeasible"
+
+    def test_mip_to_topo_aware_on_solver_failure(self, small_comm, cluster_i,
+                                                 monkeypatch):
+        """Acceptance scenario: ``FallbackChain("mip", "topo_aware")``
+        degrades gracefully when the MILP is Infeasible (here: solver
+        returns nothing within the time budget and the greedy incumbent is
+        disabled)."""
+        import types
+
+        import repro.core.mip as mip_mod
+
+        monkeypatch.setattr(
+            mip_mod, "milp",
+            lambda **kw: types.SimpleNamespace(x=None, status=1,
+                                               message="time limit reached"),
+        )
+        chain = FallbackChain("mip", "topo_aware")
+        req = ScheduleRequest(
+            comm=small_comm, cluster=cluster_i, alpha=0.3, time_budget=0.001,
+            options={"use_greedy_bound": False},
+        )
+        with pytest.raises(Infeasible):
+            get_scheduler("mip").schedule(req)  # the first link alone fails
+        res = chain.schedule(req)
+        assert res.method == "topo-aware"
+        assert res.stats["fallbacks"][0][0] == "mip"
+        assert len(res.placement.node_ids()) == small_comm.n_cells
+
+    def test_all_links_fail_raises_aggregate(self, small_comm):
+        tiny = Cluster.uniform(2, 2)
+        chain = FallbackChain("mip", "topo_aware")
+        with pytest.raises(Infeasible, match="mip.*topo-aware"):
+            chain.schedule(ScheduleRequest(comm=small_comm, cluster=tiny))
+
+    def test_first_link_success_has_no_fallback_stats(self, small_comm, cluster_i):
+        res = FallbackChain("mip", "topo-aware").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        assert "fallbacks" not in res.stats
+
+    def test_empty_chain_rejected(self):
+        with pytest.raises(ValueError):
+            FallbackChain()
+
+
+class TestQueueIntegration:
+    def test_queue_policy_takes_scheduler_by_name(self, small_comm):
+        from repro.core import QueuePolicy
+
+        cluster = Cluster.uniform(4, 8)
+        policy = QueuePolicy(cluster, scheduler="mip,topo-aware")
+        res = policy.plan_lpj(small_comm, arrival=100.0, alpha=0.3)
+        assert isinstance(res, ScheduleResult)
+        assert len(policy.reserved_nodes()) == small_comm.n_cells
+
+    def test_plan_lpj_per_call_override(self, small_comm):
+        from repro.core import QueuePolicy
+
+        cluster = Cluster.uniform(4, 8)
+        policy = QueuePolicy(cluster)  # default "mip"
+        res = policy.plan_lpj(small_comm, arrival=100.0, alpha=0.3,
+                              scheduler="gpu-packing")
+        assert res.method == "gpu-packing"
+
+    def test_simulator_lpj_plan_carries_scheduler(self, small_comm):
+        from repro.core import QueuePolicy, TraceSimulator
+
+        cluster = Cluster.uniform(4, 8)
+        policy = QueuePolicy(cluster)
+        sim = TraceSimulator(policy, tick=60.0)
+        res = sim.run([], t_end=300.0,
+                      lpj_plan=(small_comm, 200.0, 0.3, "pp", "topo-aware"),
+                      plan_at=0.0)
+        assert len(res.lpj_nodes) == small_comm.n_cells
+        assert policy.lpj.result.method == "topo-aware"
