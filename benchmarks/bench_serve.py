@@ -1,0 +1,96 @@
+"""Serving benchmark: seeded load-gen run through the continuous-batching
+engine (DESIGN.md §7), emitting the repo's first cross-PR perf baseline
+file ``BENCH_serve.json`` (tokens/sec, p50/p99 latency, batch occupancy).
+
+The workload (seed 0) is fully reproducible -- the engine's
+batching-invariance means the generated tokens are identical across runs
+and machines; the latencies are the measured quantity.
+"""
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config
+from repro.models import ModelOptions, build_model
+from repro.serve import (
+    EngineConfig,
+    LengthMixture,
+    LoadGenConfig,
+    ServeEngine,
+    generate_requests,
+    run_benchmark,
+)
+
+BENCH_FILE = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+LOAD = LoadGenConfig(
+    seed=0,
+    n_requests=12,
+    rate_rps=200.0,
+    prompt_mix=LengthMixture(((4, 0.5), (8, 0.3), (16, 0.2))),
+    response_mix=LengthMixture(((8, 0.6), (16, 0.4))),
+    vocab=512,
+)
+
+ENGINE = EngineConfig(max_batch=6, page_size=8, n_pages=48, max_blocks=4)
+
+
+def run_serve(write_json: bool = True):
+    cfg = get_config("glm4-9b").reduced()
+    model = build_model(cfg, ModelOptions(compute_dtype="float32", remat=False))
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, ENGINE)
+    requests = generate_requests(LOAD)
+    report = run_benchmark(engine, requests)
+    engine.cache.allocator.assert_all_free()  # page-recycling invariant
+
+    payload = {
+        "schema": 1,
+        "benchmark": "serve",
+        "workload": {
+            "seed": LOAD.seed,
+            "n_requests": LOAD.n_requests,
+            "rate_rps": LOAD.rate_rps,
+            "model": cfg.name + "-reduced",
+            "total_tokens": report.total_tokens,  # seed-determined
+        },
+        "engine": {
+            "max_batch": ENGINE.max_batch,
+            "page_size": ENGINE.page_size,
+            "n_pages": ENGINE.n_pages,
+        },
+        "metrics": report.to_dict(),
+        "unix_time": time.time(),
+    }
+    if write_json:
+        BENCH_FILE.write_text(json.dumps(payload, indent=2) + "\n")
+    return report, payload
+
+
+def run() -> list[tuple]:
+    report, _ = run_serve()
+    ms = 1e3  # derived column in ms where latency, else native unit
+    return [
+        ("serve_tokens_per_s", 0.0, round(report.tokens_per_s, 1)),
+        ("serve_goodput_tokens_per_s", 0.0, round(report.goodput_tokens_per_s, 1)),
+        ("serve_total_tokens", 0.0, report.total_tokens),
+        ("serve_ttft_p50", report.ttft_p50_ms * ms, round(report.ttft_p50_ms, 2)),
+        ("serve_ttft_p99", report.ttft_p99_ms * ms, round(report.ttft_p99_ms, 2)),
+        ("serve_per_token_p50", report.per_token_p50_ms * ms,
+         round(report.per_token_p50_ms, 2)),
+        ("serve_per_token_p99", report.per_token_p99_ms * ms,
+         round(report.per_token_p99_ms, 2)),
+        ("serve_e2e_p50", report.e2e_p50_ms * ms, round(report.e2e_p50_ms, 2)),
+        ("serve_e2e_p99", report.e2e_p99_ms * ms, round(report.e2e_p99_ms, 2)),
+        ("serve_mean_batch_occupancy", 0.0,
+         round(report.mean_batch_occupancy, 2)),
+        ("serve_wrote_bench_json", 0.0, int(BENCH_FILE.exists())),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

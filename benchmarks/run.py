@@ -5,9 +5,13 @@ Prints ``name,us_per_call,derived`` CSV rows.  Run as:
     PYTHONPATH=src python -m benchmarks.run bench_e2e  # one
 """
 
+import pathlib
 import sys
 import time
 import traceback
+
+if __package__ in (None, ""):  # `python benchmarks/run.py ...` (script mode)
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
     bench_breakdown,
@@ -16,6 +20,7 @@ from benchmarks import (
     bench_jct,
     bench_latency,
     bench_queue,
+    bench_serve,
     bench_spread,
     bench_volume,
     roofline_report,
@@ -30,12 +35,15 @@ ALL = {
     "bench_queue": bench_queue,        # Figure 14 / Appendix H
     "bench_jct": bench_jct,            # Figure 13 / Appendix G
     "bench_breakdown": bench_breakdown,  # Figure 10 / Appendix I
+    "bench_serve": bench_serve,        # DESIGN.md §7 -> BENCH_serve.json
     "roofline_report": roofline_report,  # §Roofline table from the dry-run
 }
 
+ALIASES = {"serve": "bench_serve"}
+
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    names = [ALIASES.get(n, n) for n in sys.argv[1:]] or list(ALL)
     unknown = [n for n in names if n not in ALL]
     if unknown:
         print(f"unknown benchmark(s) {unknown}; available: {list(ALL)}",

@@ -293,6 +293,146 @@ def attention_decode(
     return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(cd)), cache
 
 
+# ------------------------------------------------------- paged KV attention
+#
+# Serving variant of the cache (DESIGN.md §7): instead of one dense
+# (batch, max_len, ...) buffer per layer, KV lives in fixed-size *pages*
+# shared by all sequences -- {"k","v"}: (n_pages, page_size, K, hd) -- and
+# each sequence owns an ordered *block table* of page ids.  Logical position
+# ``p`` of a sequence maps to physical slot ``table[p // ps] * ps + p % ps``.
+# The allocator/bookkeeping lives in :mod:`repro.serve.kv_cache`; these
+# functions are the pure-JAX compute: scatter new KV into pages, gather a
+# sequence's pages back into a contiguous view, and attend with the same
+# fp32-softmax math as the dense path (so paged and dense decode are
+# token-identical -- the engine equivalence tests rely on it).
+
+
+def init_paged_kv(n_pages: int, page_size: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+    }
+
+
+def _paged_scatter(pages_flat, values, slots):
+    """Write ``values`` (n, K, hd) at flat slots (n,); out-of-range slots
+    (inactive lanes / padding) are dropped, not clamped."""
+    return pages_flat.at[slots].set(values.astype(pages_flat.dtype), mode="drop")
+
+
+def attention_decode_paged(
+    params,
+    x,                 # (b, 1, d) -- one new token per lane
+    pages,             # {"k","v"}: (n_pages, page_size, K, hd)
+    block_table,       # (b, max_blocks) int32 page ids, -1 = unallocated
+    lengths,           # (b,) int32: tokens already cached per lane
+    active,            # (b,) bool: lane holds a live sequence
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+    use_rope: bool = True,
+):
+    """Single-token decode against a paged KV cache.
+
+    Unlike :func:`attention_decode` (one scalar write index for the whole
+    batch) every lane carries its own length, which is what lets the engine
+    admit requests mid-flight: lane i writes at logical position
+    ``lengths[i]`` and attends positions ``<= lengths[i]``.  Inactive lanes
+    are masked out of the scatter entirely (their block tables are empty).
+    """
+    b = x.shape[0]
+    cd = x.dtype
+    n_pages, ps = pages["k"].shape[:2]
+    max_blocks = block_table.shape[1]
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(cd)), n_heads, head_dim)
+    k_new = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(cd)), n_kv_heads, head_dim)
+    v_new = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(cd)), n_kv_heads, head_dim)
+    pos = lengths[:, None]  # (b, 1)
+    if use_rope:
+        q = apply_rope(q, pos, rope_theta)
+        k_new = apply_rope(k_new, pos, rope_theta)
+
+    write_block = jnp.take_along_axis(
+        block_table, (lengths // ps)[:, None] % max_blocks, axis=1
+    )[:, 0]
+    slots = write_block * ps + lengths % ps
+    slots = jnp.where(active & (write_block >= 0), slots, n_pages * ps)  # drop
+    flat_k = _paged_scatter(pages["k"].reshape(n_pages * ps, n_kv_heads, head_dim), k_new[:, 0], slots)
+    flat_v = _paged_scatter(pages["v"].reshape(n_pages * ps, n_kv_heads, head_dim), v_new[:, 0], slots)
+
+    # gather each lane's pages into a contiguous (L = max_blocks*ps) view
+    safe_table = jnp.where(block_table >= 0, block_table, 0)
+    idx = (safe_table[:, :, None] * ps + jnp.arange(ps)[None, None, :]).reshape(b, -1)
+    k = flat_k[idx]  # (b, L, K, hd)
+    v = flat_v[idx]
+    kpos = jnp.arange(max_blocks * ps)
+    valid = (kpos[None, :] <= lengths[:, None]) & jnp.repeat(block_table >= 0, ps, axis=1)
+    k = _repeat_kv(k.astype(cd), n_heads // n_kv_heads)
+    v = _repeat_kv(v.astype(cd), n_heads // n_kv_heads)
+    out = attention_scores(q, k, v, valid[:, None, None, :], compute_dtype=cd)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    proj = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(cd))
+    new_pages = {
+        "k": flat_k.reshape(n_pages, ps, n_kv_heads, head_dim),
+        "v": flat_v.reshape(n_pages, ps, n_kv_heads, head_dim),
+    }
+    return proj, new_pages
+
+
+def attention_prefill_paged(
+    params,
+    x,                 # (1, S, d) -- padded prompt for one sequence
+    pages,             # {"k","v"}: (n_pages, page_size, K, hd)
+    block_table,       # (max_blocks,) int32 page ids, -1 = unallocated
+    length,            # scalar int32: true prompt length (<= S)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+    use_rope: bool = True,
+):
+    """Full-prompt prefill for one sequence, scattering its KV into pages.
+
+    The prompt is padded to a bucketed S (bounding jit retraces); causal
+    masking means padding positions never influence positions < ``length``,
+    and their KV is dropped from the scatter, so pages hold exactly the
+    ``length`` real tokens afterwards.
+    """
+    _, s, _ = x.shape
+    cd = x.dtype
+    n_pages, ps = pages["k"].shape[:2]
+    positions = jnp.arange(s)[None, :]
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(cd)), n_heads, head_dim)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(cd)), n_kv_heads, head_dim)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(cd)), n_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    pos = jnp.arange(s)
+    blocks = block_table[(pos // ps) % block_table.shape[0]]
+    slots = blocks * ps + pos % ps
+    slots = jnp.where((pos < length) & (blocks >= 0), slots, n_pages * ps)
+    flat_k = _paged_scatter(pages["k"].reshape(n_pages * ps, n_kv_heads, head_dim), k[0], slots)
+    flat_v = _paged_scatter(pages["v"].reshape(n_pages * ps, n_kv_heads, head_dim), v[0], slots)
+
+    kr = _repeat_kv(k, n_heads // n_kv_heads)
+    vr = _repeat_kv(v, n_heads // n_kv_heads)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))[None, None]
+    out = attention_scores(q, kr, vr, mask, compute_dtype=cd)
+    out = out.reshape(1, s, n_heads * head_dim)
+    proj = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(cd))
+    new_pages = {
+        "k": flat_k.reshape(n_pages, ps, n_kv_heads, head_dim),
+        "v": flat_v.reshape(n_pages, ps, n_kv_heads, head_dim),
+    }
+    return proj, new_pages
+
+
 # -------------------------------------------------------------------- SwiGLU
 def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
     kg, ki, ko = jax.random.split(key, 3)

@@ -205,6 +205,67 @@ class DecoderLM:
         kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
         return {"kv": {"k": kv, "v": kv}, "index": ()}
 
+    # ---------------------------------------------------------- paged serve
+    def init_paged_cache(self, n_pages: int, page_size: int) -> dict:
+        """Per-layer paged KV pool (DESIGN.md §7): {"k","v"} of shape
+        (n_layers, n_pages, page_size, K, hd).  Page bookkeeping (free list,
+        block tables) lives in :class:`repro.serve.kv_cache.PagedKVCache`."""
+        cfg = self.cfg
+        kv = L.init_paged_kv(n_pages, page_size, cfg.n_kv_heads,
+                             cfg.resolved_head_dim, dtype=self.opts.cdt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), kv
+        )
+
+    def _paged_layer_stack(self, params, x, attn_fn, pages):
+        """Scan the layer stack threading per-layer pages through
+        ``attn_fn(layer_params, normed_x, layer_pages) -> (h, new_pages)``."""
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, pg = inp
+            h, pg = attn_fn(lp, L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps), pg)
+            x = x + h
+            normed = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+            if cfg.is_moe:
+                cf = self.opts.moe_capacity_factor or cfg.capacity_factor
+                h = L.moe_fwd(lp["moe"], normed, top_k=cfg.top_k, capacity_factor=cf)
+            else:
+                h = L.mlp_fwd(lp["mlp"], normed)
+            return x + h, pg
+
+        x, pages = jax.lax.scan(body, x, (params["layers"], pages))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits(params, x), pages
+
+    def decode_step_paged(self, params, pages, block_tables, lengths, tokens,
+                          active) -> tuple[jax.Array, dict]:
+        """Continuous-batching decode: one token per lane against the paged
+        cache.  ``tokens`` (b, 1); ``block_tables`` (b, max_blocks);
+        ``lengths``/``active`` (b,).  Returns (logits (b, 1, V), new pages)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        attn = lambda lp, normed, pg: L.attention_decode_paged(
+            lp["attn"], normed, pg, block_tables, lengths, active,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        )
+        return self._paged_layer_stack(params, x, attn, pages)
+
+    def prefill_paged(self, params, pages, block_table, length, tokens
+                      ) -> tuple[jax.Array, dict]:
+        """Prefill one sequence (tokens (1, S) padded, true length
+        ``length``), scattering its KV into pages.  Returns (logits (1, S, V),
+        new pages); the caller samples from position ``length - 1``."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        attn = lambda lp, normed, pg: L.attention_prefill_paged(
+            lp["attn"], normed, pg, block_table, length,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        )
+        return self._paged_layer_stack(params, x, attn, pages)
+
     def decode_step(self, params, cache, tokens) -> tuple[jax.Array, dict]:
         """One-token decode: tokens (b, 1) -> (logits (b, 1, V), new cache)."""
         cfg = self.cfg

@@ -1,0 +1,34 @@
+"""repro.serve: continuous-batching inference on the repro kernels
+(DESIGN.md §7).
+
+* :mod:`repro.serve.kv_cache`  -- paged/blocked KV cache: fixed-size pages,
+  free-list allocator, per-sequence block tables
+* :mod:`repro.serve.request`   -- GenerationRequest / GenerationResult
+* :mod:`repro.serve.engine`    -- continuous-batching engine (mid-flight
+  admission, prefill + batched decode, page recycling)
+* :mod:`repro.serve.loadgen`   -- seeded Poisson load generator + latency /
+  throughput report
+* :mod:`repro.serve.placement` -- topology-aware replica placement via the
+  unified Scheduler registry
+"""
+
+from repro.serve.engine import EngineConfig, EngineStats, ServeEngine
+from repro.serve.kv_cache import OutOfPages, PageAllocator, PagedKVCache
+from repro.serve.loadgen import (
+    LengthMixture,
+    LoadGenConfig,
+    ServeReport,
+    generate_requests,
+    run_benchmark,
+)
+from repro.serve.placement import ReplicaPlacement, ReplicaSet, ReplicaSpec, place_replicas
+from repro.serve.request import GenerationRequest, GenerationResult
+
+__all__ = [
+    "EngineConfig", "EngineStats", "ServeEngine",
+    "OutOfPages", "PageAllocator", "PagedKVCache",
+    "LengthMixture", "LoadGenConfig", "ServeReport",
+    "generate_requests", "run_benchmark",
+    "ReplicaPlacement", "ReplicaSet", "ReplicaSpec", "place_replicas",
+    "GenerationRequest", "GenerationResult",
+]
