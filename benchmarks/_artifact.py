@@ -1,0 +1,134 @@
+"""Shared benchmark-artifact API (DESIGN.md §5).
+
+Every cross-PR perf baseline lives in a ``BENCH_<area>.json`` file at the
+repo root with one schema (version 1):
+
+    {
+      "schema": 1,
+      "benchmark": "<area>",          # e.g. "serve", "sched_latency"
+      "workload": {...},              # scalar fingerprint of what was run
+      "metrics": {...},               # name -> number, the measured values
+      ...extra sections...,           # free-form dicts (engine config, ...)
+      "unix_time": <float>
+    }
+
+Producers call :func:`write_bench` (which validates before writing);
+consumers and CI call :func:`validate_artifact` /
+``python -m benchmarks._artifact FILE...`` so a malformed artifact fails
+the build instead of silently breaking cross-PR comparison.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+SCHEMA_VERSION = 1
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_SCALAR = (str, int, float, bool, type(None))
+
+
+class ArtifactError(ValueError):
+    """A payload that does not conform to the BENCH_*.json schema."""
+
+
+def artifact_path(area: str) -> pathlib.Path:
+    return REPO_ROOT / f"BENCH_{area}.json"
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ArtifactError(msg)
+
+
+def validate_artifact(payload: dict) -> dict:
+    """Validate one artifact payload against schema 1; return it unchanged.
+
+    ``workload`` values must be scalars (the fingerprint must stay
+    diffable); ``metrics`` values must be real numbers (they are what
+    cross-PR tooling plots); extra top-level sections must be dicts of
+    scalars or scalars.
+    """
+    _require(isinstance(payload, dict), "artifact must be a JSON object")
+    _require(payload.get("schema") == SCHEMA_VERSION,
+             f"schema must be {SCHEMA_VERSION}, got {payload.get('schema')!r}")
+    area = payload.get("benchmark")
+    _require(isinstance(area, str) and bool(area),
+             "benchmark must be a non-empty string")
+    for section in ("workload", "metrics"):
+        _require(isinstance(payload.get(section), dict),
+                 f"{section} must be a dict")
+    for k, v in payload["workload"].items():
+        _require(isinstance(k, str) and isinstance(v, _SCALAR),
+                 f"workload[{k!r}] must be a scalar, got {type(v).__name__}")
+    _require(bool(payload["metrics"]), "metrics must be non-empty")
+    for k, v in payload["metrics"].items():
+        _require(isinstance(k, str)
+                 and isinstance(v, (int, float)) and not isinstance(v, bool),
+                 f"metrics[{k!r}] must be a number, got {v!r}")
+    _require(isinstance(payload.get("unix_time"), (int, float)),
+             "unix_time must be a number")
+    for k, v in payload.items():
+        if k in ("schema", "benchmark", "workload", "metrics", "unix_time"):
+            continue
+        _require(isinstance(v, _SCALAR) or isinstance(v, dict),
+                 f"extra section {k!r} must be a scalar or dict")
+        if isinstance(v, dict):
+            for kk, vv in v.items():
+                _require(isinstance(kk, str) and isinstance(vv, _SCALAR),
+                         f"{k}[{kk!r}] must be a scalar")
+    return payload
+
+
+def write_bench(
+    area: str,
+    workload: dict,
+    metrics: dict,
+    *,
+    path: "pathlib.Path | str | None" = None,
+    **extra: dict,
+) -> pathlib.Path:
+    """Validate and write ``BENCH_<area>.json``; return the path written.
+
+    ``extra`` keyword sections (e.g. ``engine={...}``) are stored at the
+    top level next to ``workload``/``metrics``.
+    """
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "benchmark": area,
+        "workload": dict(workload),
+        "metrics": dict(metrics),
+        **extra,
+        "unix_time": time.time(),
+    }
+    validate_artifact(payload)
+    out = pathlib.Path(path) if path is not None else artifact_path(area)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    return out
+
+
+def main(argv: list[str]) -> int:
+    """CLI validator: ``python -m benchmarks._artifact BENCH_*.json``."""
+    if not argv:
+        print("usage: python -m benchmarks._artifact BENCH_<area>.json ...",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for name in argv:
+        p = pathlib.Path(name)
+        try:
+            payload = validate_artifact(json.loads(p.read_text()))
+        except (OSError, json.JSONDecodeError, ArtifactError) as e:
+            print(f"{p}: INVALID -- {e}")
+            bad += 1
+            continue
+        print(f"{p}: ok (benchmark={payload['benchmark']}, "
+              f"{len(payload['metrics'])} metrics)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,22 +1,49 @@
-"""Figure 8 reproduction: scheduling latency -- Arnold's MILP vs exact
-enumeration.  The paper: enumeration needs 30 s at 14 nodes in the simple
-topology and 100 s+ at 10 nodes in the medium one, while the MILP schedules
-a 512-node job in a 1000+-node cluster at interactive latency.
+"""Figure 8 reproduction + the scale tier (DESIGN.md §8): scheduling
+latency of exact enumeration vs Arnold's flat MILP vs the hierarchical
+``"hier"`` tier.
+
+The paper: enumeration needs 30 s at 14 nodes in the simple topology and
+100 s+ at 10 nodes in the medium one, while the MILP schedules a 512-node
+job in a 1000+-node cluster at interactive latency.  The scale tier goes
+beyond the paper: on a ~10k-node cluster every ``"hier"`` solve must fit a
+1 s budget, a warm-start re-solve after a single-node failure must beat
+the cold solve by a wide margin, and the placement cache must hit on a
+recurring job shape.  Results are snapshotted to
+``BENCH_sched_latency.json`` through the shared artifact API --
+the scheduler side's cross-PR perf baseline.
+
+``run(smoke=True)`` (CI) shrinks the cluster and skips the enumeration
+blow-up but exercises every scale-tier path and still writes the artifact.
 """
 
 import itertools
+import pathlib
+import sys
 import time
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_latency.py
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import numpy as np
 
+from benchmarks._artifact import artifact_path, write_bench
 from repro.core import (Cluster, JobSpec, ModelSpec, ScheduleRequest,
-                        build_comm_matrix, get_scheduler)
+                        build_comm_matrix, get_scheduler, weighted_spread)
 from repro.core.mip import _counts_objective
+
+BENCH_FILE = artifact_path("sched_latency")
 
 MODEL7B = ModelSpec(
     name="gpt-7b", hidden=4096, layers=32, vocab=50304, seq_len=2048,
     global_batch=1024, micro_batch=1, d_ff=16384,
 )
+
+ALPHA = 0.3
+SOLVER_BUDGET_S = 1.0
+
+# Paper-setting parity jobs: (setting, n_gpus, tp, pp) sized to fit each
+# Table 1 cluster subset.
+PARITY_JOBS = (("i", 96, 4, 2), ("ii", 2048, 8, 8), ("iii", 4096, 8, 8))
 
 
 def enumerate_optimal(group_size: int, m: int, free: np.ndarray, alpha: float,
@@ -62,30 +89,122 @@ def enumerate_optimal(group_size: int, m: int, free: np.ndarray, alpha: float,
     return best[0], time.perf_counter() - t0, timed_out[0]
 
 
-def run() -> list[tuple]:
+def _schedule(name: str, comm, cluster, **req_kw):
+    req = ScheduleRequest(comm=comm, cluster=cluster, alpha=ALPHA, **req_kw)
+    t0 = time.perf_counter()
+    res = get_scheduler(name).schedule(req)
+    return res, time.perf_counter() - t0
+
+
+def _scale_tier_rows(smoke: bool) -> tuple[list[tuple], dict, dict]:
+    """Scale-tier measurements; returns (csv rows, workload, metrics)."""
+    rows: list[tuple] = []
+    metrics: dict = {}
+
+    if smoke:
+        n_pods, nodes_per_pod = 32, 32          # 1024 nodes
+        job = JobSpec(n_gpus=1024, tp=8, pp=8, model=MODEL7B)   # 128 nodes
+    else:
+        n_pods, nodes_per_pod = 104, 96         # 9984 nodes ("10k-node")
+        job = JobSpec(n_gpus=4096, tp=8, pp=8, model=MODEL7B)   # 512 nodes
+    cluster = Cluster.uniform(n_pods, nodes_per_pod)
+    comm = build_comm_matrix(job)
+
+    # Cold hierarchical solve under the 1 s budget.
+    cold, cold_wall = _schedule("hier", comm, cluster,
+                                time_budget=SOLVER_BUDGET_S)
+    rows.append((f"latency_hier_cold_{cluster.n_nodes}nodes_ms",
+                 cold_wall * 1e6, round(cold_wall * 1e3, 2)))
+    metrics["hier_cold_s"] = cold.solve_seconds
+    metrics["hier_cold_subsecond"] = int(cold.solve_seconds < SOLVER_BUDGET_S)
+    metrics["hier_blocks_touched"] = cold.stats["blocks_touched"]
+    metrics["hier_weighted_spread"] = weighted_spread(cold.placement, ALPHA)
+
+    # Flat MILP on the same cluster, for the latency comparison row.
+    flat, flat_wall = _schedule("mip", comm, cluster)
+    rows.append((f"latency_mip_flat_{cluster.n_nodes}nodes_ms",
+                 flat_wall * 1e6, round(flat_wall * 1e3, 2)))
+    metrics["mip_flat_s"] = flat.solve_seconds
+    metrics["flat_weighted_spread"] = weighted_spread(flat.placement, ALPHA)
+
+    # Warm-start re-solve after a single-node failure.
+    victim = cold.placement.node_ids()[0]
+    warm, _ = _schedule(
+        "hier", comm, cluster, time_budget=SOLVER_BUDGET_S,
+        prev_placement=cold.placement,
+        dirty_nodes=frozenset([victim]),
+        excluded_nodes=frozenset([victim]),
+    )
+    speedup = cold.solve_seconds / max(warm.solve_seconds, 1e-9)
+    rows.append(("latency_hier_warm_ms", warm.solve_seconds * 1e6,
+                 round(warm.solve_seconds * 1e3, 3)))
+    rows.append(("latency_warm_speedup_x", 0.0, round(speedup, 1)))
+    metrics["hier_warm_s"] = warm.solve_seconds
+    metrics["warm_speedup_x"] = speedup
+    metrics["warm_used_repair"] = int(warm.method == "hier-warm")
+
+    # Placement cache: the same job shape again must hit.
+    rerun, _ = _schedule("hier", comm, cluster, time_budget=SOLVER_BUDGET_S)
+    metrics["cache_hit_on_rerun"] = int(rerun.method == "hier-cached")
+    metrics["cache_hit_rate"] = rerun.stats["cache"]["hit_rate"]
+    rows.append(("latency_cache_hit_on_rerun", 0.0,
+                 metrics["cache_hit_on_rerun"]))
+
+    # Paper-setting parity: hier weighted spread vs flat mip (target: <=1.1x).
+    worst_ratio = 0.0
+    for which, n_gpus, tp, pp in PARITY_JOBS:
+        pcomm = build_comm_matrix(JobSpec(n_gpus=n_gpus, tp=tp, pp=pp,
+                                          model=MODEL7B))
+        pm, _ = _schedule("mip", pcomm, Cluster.paper_setting(which))
+        ph, _ = _schedule("hier", pcomm, Cluster.paper_setting(which))
+        sm = weighted_spread(pm.placement, ALPHA)
+        sh = weighted_spread(ph.placement, ALPHA)
+        ratio = sh / max(sm, 1e-9)
+        worst_ratio = max(worst_ratio, ratio)
+        rows.append((f"spread_parity_hier_vs_mip_{which}", 0.0,
+                     round(ratio, 3)))
+    metrics["spread_parity_worst_ratio"] = worst_ratio
+
+    workload = {
+        "n_minipods": n_pods,
+        "nodes_per_minipod": nodes_per_pod,
+        "n_cluster_nodes": cluster.n_nodes,
+        "job_nodes": job.n_nodes,
+        "comm_shape": f"{comm.n_rows}x{comm.n_cols}",
+        "alpha": ALPHA,
+        "solver_budget_s": SOLVER_BUDGET_S,
+        "free_signature_head": str(cluster.free_signature(8)[:4]),
+        "smoke": smoke,
+    }
+    return rows, workload, metrics
+
+
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    # enumeration blow-up on setting (i)-like topology
-    free3 = np.array([6.0, 6.0, 6.0])
-    for m in (2, 4, 6):
-        obj, dt, to = enumerate_optimal(2, m, free3, 0.3, 0.7, deadline=20.0)
-        rows.append((f"latency_enumeration_{m * 2}nodes_s", dt * 1e6,
-                     round(dt, 3) if not to else "timeout"))
-    # Arnold MILP latency across job scales on the big cluster
-    cluster = Cluster.paper_setting("iii")
-    for n_nodes, tp, pp in ((16, 8, 8), (64, 8, 8), (368, 8, 8), (512, 8, 8)):
-        dp = n_nodes * 8 // tp // pp
-        comm = build_comm_matrix(JobSpec(n_gpus=n_nodes * 8, tp=tp, pp=pp, model=MODEL7B))
-        t0 = time.perf_counter()
-        res = get_scheduler("mip").schedule(
-            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3)
-        )
-        dt = time.perf_counter() - t0
-        rows.append((f"latency_arnold_{n_nodes}nodes_ms", dt * 1e6,
-                     round(dt * 1e3, 1)))
-    rows.append(("paper_claim_512node_subsecond_ok", 0.0, int(dt < 1.0)))
+    if not smoke:
+        # enumeration blow-up on setting (i)-like topology
+        free3 = np.array([6.0, 6.0, 6.0])
+        for m in (2, 4, 6):
+            obj, dt, to = enumerate_optimal(2, m, free3, 0.3, 0.7, deadline=20.0)
+            rows.append((f"latency_enumeration_{m * 2}nodes_s", dt * 1e6,
+                         round(dt, 3) if not to else "timeout"))
+        # Arnold MILP latency across job scales on the big cluster
+        cluster = Cluster.paper_setting("iii")
+        for n_nodes, tp, pp in ((16, 8, 8), (64, 8, 8), (368, 8, 8), (512, 8, 8)):
+            comm = build_comm_matrix(
+                JobSpec(n_gpus=n_nodes * 8, tp=tp, pp=pp, model=MODEL7B))
+            res, dt = _schedule("mip", comm, cluster)
+            rows.append((f"latency_arnold_{n_nodes}nodes_ms", dt * 1e6,
+                         round(dt * 1e3, 1)))
+        rows.append(("paper_claim_512node_subsecond_ok", 0.0, int(dt < 1.0)))
+
+    scale_rows, workload, metrics = _scale_tier_rows(smoke)
+    rows.extend(scale_rows)
+    write_bench("sched_latency", workload=workload, metrics=metrics)
+    rows.append(("latency_wrote_bench_json", 0.0, int(BENCH_FILE.exists())))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run(smoke="--smoke" in sys.argv):
         print(",".join(str(x) for x in r))

@@ -1,18 +1,22 @@
 """Serving benchmark: seeded load-gen run through the continuous-batching
-engine (DESIGN.md §7), emitting the repo's first cross-PR perf baseline
-file ``BENCH_serve.json`` (tokens/sec, p50/p99 latency, batch occupancy).
+engine (DESIGN.md §7), emitting the cross-PR perf baseline
+``BENCH_serve.json`` (tokens/sec, p50/p99 latency, batch occupancy)
+through the shared artifact API (:mod:`benchmarks._artifact`).
 
 The workload (seed 0) is fully reproducible -- the engine's
 batching-invariance means the generated tokens are identical across runs
 and machines; the latencies are the measured quantity.
 """
 
-import json
-import time
-from pathlib import Path
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_serve.py
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 
+from benchmarks._artifact import artifact_path, write_bench
 from repro.configs import get_config
 from repro.models import ModelOptions, build_model
 from repro.serve import (
@@ -24,7 +28,7 @@ from repro.serve import (
     run_benchmark,
 )
 
-BENCH_FILE = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+BENCH_FILE = artifact_path("serve")
 
 LOAD = LoadGenConfig(
     seed=0,
@@ -35,43 +39,52 @@ LOAD = LoadGenConfig(
     vocab=512,
 )
 
+SMOKE_LOAD = LoadGenConfig(
+    seed=0,
+    n_requests=4,
+    rate_rps=200.0,
+    prompt_mix=LengthMixture(((4, 0.7), (8, 0.3))),
+    response_mix=LengthMixture(((8, 1.0),)),
+    vocab=512,
+)
+
 ENGINE = EngineConfig(max_batch=6, page_size=8, n_pages=48, max_blocks=4)
 
 
-def run_serve(write_json: bool = True):
+def run_serve(write_json: bool = True, smoke: bool = False):
+    load = SMOKE_LOAD if smoke else LOAD
     cfg = get_config("glm4-9b").reduced()
     model = build_model(cfg, ModelOptions(compute_dtype="float32", remat=False))
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, ENGINE)
-    requests = generate_requests(LOAD)
+    requests = generate_requests(load)
     report = run_benchmark(engine, requests)
     engine.cache.allocator.assert_all_free()  # page-recycling invariant
 
-    payload = {
-        "schema": 1,
-        "benchmark": "serve",
-        "workload": {
-            "seed": LOAD.seed,
-            "n_requests": LOAD.n_requests,
-            "rate_rps": LOAD.rate_rps,
-            "model": cfg.name + "-reduced",
-            "total_tokens": report.total_tokens,  # seed-determined
-        },
-        "engine": {
-            "max_batch": ENGINE.max_batch,
-            "page_size": ENGINE.page_size,
-            "n_pages": ENGINE.n_pages,
-        },
-        "metrics": report.to_dict(),
-        "unix_time": time.time(),
-    }
+    payload_path = None
     if write_json:
-        BENCH_FILE.write_text(json.dumps(payload, indent=2) + "\n")
-    return report, payload
+        payload_path = write_bench(
+            "serve",
+            workload={
+                "seed": load.seed,
+                "n_requests": load.n_requests,
+                "rate_rps": load.rate_rps,
+                "model": cfg.name + "-reduced",
+                "total_tokens": report.total_tokens,  # seed-determined
+                "smoke": smoke,
+            },
+            metrics=report.to_dict(),
+            engine={
+                "max_batch": ENGINE.max_batch,
+                "page_size": ENGINE.page_size,
+                "n_pages": ENGINE.n_pages,
+            },
+        )
+    return report, payload_path
 
 
-def run() -> list[tuple]:
-    report, _ = run_serve()
+def run(smoke: bool = False) -> list[tuple]:
+    report, _ = run_serve(smoke=smoke)
     ms = 1e3  # derived column in ms where latency, else native unit
     return [
         ("serve_tokens_per_s", 0.0, round(report.tokens_per_s, 1)),
@@ -92,5 +105,5 @@ def run() -> list[tuple]:
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run(smoke="--smoke" in sys.argv):
         print(",".join(str(x) for x in r))

@@ -47,7 +47,7 @@ def _one(setting: str, alpha: float, fragment: float, seed: int = 0):
     ours = weighted_spread(get_scheduler("mip").schedule(request).placement, alpha)
     base = {}
     for name in list_schedulers():
-        if name == "mip":
+        if name in ("mip", "hier"):  # Arnold-family tiers are not baselines
             continue
         try:
             base[name] = weighted_spread(

@@ -3,8 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Run as:
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run bench_e2e  # one
+    PYTHONPATH=src python -m benchmarks.run latency serve --smoke  # CI
+    PYTHONPATH=src python -m benchmarks.run --list    # areas + artifacts
+
+Modules whose ``run`` accepts a ``smoke`` argument honor ``--smoke``
+(shrunk workload, same code paths).  Modules with a ``BENCH_FILE``
+attribute emit a cross-PR ``BENCH_<area>.json`` artifact (schema in
+:mod:`benchmarks._artifact`).
 """
 
+import inspect
 import pathlib
 import sys
 import time
@@ -30,7 +38,7 @@ ALL = {
     "bench_volume": bench_volume,      # Appendix C (2 GB / 30 MB claim)
     "bench_comm": bench_comm,          # Figure 4 (BusBw model)
     "bench_spread": bench_spread,      # Figure 7 / Table 1
-    "bench_latency": bench_latency,    # Figure 8 (scalability)
+    "bench_latency": bench_latency,    # Figure 8 + scale tier -> BENCH_sched_latency.json
     "bench_e2e": bench_e2e,            # Figures 5 + 9 (simulated E2E)
     "bench_queue": bench_queue,        # Figure 14 / Appendix H
     "bench_jct": bench_jct,            # Figure 13 / Appendix G
@@ -39,11 +47,32 @@ ALL = {
     "roofline_report": roofline_report,  # §Roofline table from the dry-run
 }
 
-ALIASES = {"serve": "bench_serve"}
+ALIASES = {"serve": "bench_serve", "latency": "bench_latency"}
+
+
+def artifact_of(mod) -> "pathlib.Path | None":
+    """The BENCH_*.json this module emits, if any."""
+    return getattr(mod, "BENCH_FILE", None)
+
+
+def list_areas() -> None:
+    for name, mod in ALL.items():
+        art = artifact_of(mod)
+        smoke = "smoke" in inspect.signature(mod.run).parameters
+        tags = [t for t, on in (("--smoke", smoke),) if on]
+        if art is not None:
+            tags.append(f"emits {art.name}")
+        print(f"{name:<18} {' '.join(tags)}".rstrip())
 
 
 def main() -> None:
-    names = [ALIASES.get(n, n) for n in sys.argv[1:]] or list(ALL)
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    argv = [a for a in argv if a != "--smoke"]
+    if "--list" in argv:
+        list_areas()
+        return
+    names = [ALIASES.get(n, n) for n in argv] or list(ALL)
     unknown = [n for n in names if n not in ALL]
     if unknown:
         print(f"unknown benchmark(s) {unknown}; available: {list(ALL)}",
@@ -53,9 +82,12 @@ def main() -> None:
     failures = 0
     for name in names:
         mod = ALL[name]
+        kwargs = {}
+        if smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         t0 = time.perf_counter()
         try:
-            rows = mod.run()
+            rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures += 1
             traceback.print_exc(file=sys.stderr)

@@ -9,6 +9,10 @@ The paper's primary contribution, as a composable library:
 * :mod:`repro.core.baselines`    -- best-fit / random-fit / gpu-packing / topo-aware
 * :mod:`repro.core.scheduler`    -- unified Scheduler API: request/result
   contract, policy registry, fallback chains
+* :mod:`repro.core.hierarchical` -- "hier" scale tier: block decomposition,
+  warm-start re-solve, placement cache (sub-second at 10k nodes)
+* :mod:`repro.core.placement_cache` -- counts-matrix cache for recurring
+  job shapes
 * :mod:`repro.core.affinity`     -- characterization DB -> (alpha, beta)
 * :mod:`repro.core.queue`        -- Algorithm 1 reservation policy
 * :mod:`repro.core.jct`          -- GBM job-completion-time predictor
@@ -31,8 +35,10 @@ from repro.core.comm_matrix import (
     pp_volume_bytes,
 )
 from repro.core.failures import FailureManager
+from repro.core.hierarchical import HierarchicalScheduler
 from repro.core.jct import JCTPredictor, synthetic_trace
 from repro.core.mip import Infeasible, MipResult, schedule_mip
+from repro.core.placement_cache import CacheStats, PlacementCache
 from repro.core.netmodel import NetModel, NetModelConfig, simulate_step_time
 from repro.core.queue import Job, QueuePolicy
 from repro.core.rank_assign import device_permutation, logical_to_physical_gpus

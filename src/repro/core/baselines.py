@@ -14,10 +14,12 @@
 Each baseline returns a :class:`Placement` so all algorithms are scored by
 the same Eq. 2 weighted-spread metric.
 
-The public functions here are thin shims over the unified scheduler registry
-(:mod:`repro.core.scheduler`); the ``_``-prefixed implementations are what
-the registry wraps.  Prefer ``get_scheduler(name).schedule(request)`` in new
-code -- it adds excluded/reserved-node masking and a uniform result type.
+The public functions here are **deprecated** thin shims over the unified
+scheduler registry (:mod:`repro.core.scheduler`); the ``_``-prefixed
+implementations are what the registry wraps.  Use
+``get_scheduler(name).schedule(request)`` -- the only supported entry point
+(DESIGN.md §2.4) -- which adds excluded/reserved-node masking and a uniform
+result type; the shims emit :class:`DeprecationWarning` on every call.
 """
 
 from __future__ import annotations
@@ -228,23 +230,35 @@ def _topo_aware(comm: CommMatrix, cluster: Cluster) -> Placement:
 
 
 # ---------------------------------------------------------------------------
-# Public entry points: thin shims over the scheduler registry.
+# Public entry points: deprecated thin shims over the scheduler registry.
+# The registry (get_scheduler, DESIGN.md §2.4) is the only supported entry
+# point; these remain for backward compatibility and warn on every call.
 # ---------------------------------------------------------------------------
 
 def _via_registry(name: str, comm: CommMatrix, cluster: Cluster, **req_kw) -> Placement:
+    import warnings
+
     from repro.core.scheduler import ScheduleRequest, get_scheduler
 
+    warnings.warn(
+        f"the module-level baseline functions are deprecated; use "
+        f'get_scheduler("{name}").schedule(ScheduleRequest(...)) instead',
+        DeprecationWarning,
+        stacklevel=3,
+    )
     request = ScheduleRequest(comm=comm, cluster=cluster, **req_kw)
     return get_scheduler(name).schedule(request).placement
 
 
 def best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
-    """Best-fit baseline; see :func:`_best_fit` for the algorithm."""
+    """Deprecated shim for ``get_scheduler("best-fit")``; see
+    :func:`_best_fit` for the algorithm."""
     return _via_registry("best-fit", comm, cluster)
 
 
 def gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
-    """GPU-packing baseline; see :func:`_gpu_packing` for the algorithm."""
+    """Deprecated shim for ``get_scheduler("gpu-packing")``; see
+    :func:`_gpu_packing` for the algorithm."""
     return _via_registry("gpu-packing", comm, cluster)
 
 
@@ -254,14 +268,14 @@ def random_fit(
     seed: int = 0,
     rng: Optional[np.random.Generator] = None,
 ) -> Placement:
-    """Random-fit baseline; reproducible via ``seed`` or an explicit ``rng``
-    (``rng`` wins when both are given)."""
+    """Deprecated shim for ``get_scheduler("random-fit")``; reproducible via
+    ``seed`` or an explicit ``rng`` (``rng`` wins when both are given)."""
     return _via_registry("random-fit", comm, cluster, seed=seed, rng=rng)
 
 
 def topo_aware(comm: CommMatrix, cluster: Cluster, seed: int = 0) -> Placement:
-    """Topo-aware baseline; ``seed`` is accepted for API compatibility but
-    the FM partitioning is deterministic."""
+    """Deprecated shim for ``get_scheduler("topo-aware")``; ``seed`` is
+    accepted for API compatibility but the FM partitioning is deterministic."""
     del seed
     return _via_registry("topo-aware", comm, cluster)
 

@@ -402,11 +402,23 @@ def schedule_mip(
     ``alpha * sum_j y_j`` consolidates the orthogonal DP groups; ``"dp"``
     swaps the roles (used when DP communication dominates, Appendix E).
 
-    Thin shim over the unified scheduler registry: equivalent to
-    ``get_scheduler("mip").schedule(ScheduleRequest(...))`` (see
-    :mod:`repro.core.scheduler`), repackaged as a :class:`MipResult`.
+    .. deprecated::
+        Thin shim over the unified scheduler registry, kept only for
+        backward compatibility: use
+        ``get_scheduler("mip").schedule(ScheduleRequest(...))`` (see
+        :mod:`repro.core.scheduler` and DESIGN.md §2.4), which this
+        delegates to before repackaging as a :class:`MipResult`.
     """
+    import warnings
+
     from repro.core.scheduler import ScheduleRequest, get_scheduler
+
+    warnings.warn(
+        "schedule_mip() is deprecated; use "
+        'get_scheduler("mip").schedule(ScheduleRequest(...)) instead',
+        DeprecationWarning,
+        stacklevel=2,
+    )
 
     request = ScheduleRequest(
         comm=comm,

@@ -123,6 +123,37 @@ class QueuePolicy:
         )
         return result
 
+    def replan_lpj(self, dirty_nodes, scheduler: "str | Scheduler | None" = None
+                   ) -> ScheduleResult:
+        """Re-solve the planned LPJ placement after node churn.
+
+        ``dirty_nodes`` are the nodes that changed (failed/drained) since
+        :meth:`plan_lpj`; they are excluded from the new solve and passed
+        as the warm-start hint together with the previous placement, so a
+        warm-start-capable scheduler ("hier") repairs the reservation
+        locally instead of re-solving from scratch.  Updates the stored
+        plan (and thereby the reserved zone) in place.
+        """
+        if self.lpj is None or self.lpj.result is None:
+            raise ValueError("no planned LPJ to re-plan")
+        lpj = self.lpj
+        dirty = frozenset(dirty_nodes)
+        sched = self.scheduler if scheduler is None else get_scheduler(scheduler)
+        snapshot = self.cluster.snapshot_free()
+        occupied_by_jobs = [n for j in self.running.values() for n in j.nodes]
+        self.cluster.release(occupied_by_jobs)
+        try:
+            result = sched.schedule(ScheduleRequest(
+                comm=lpj.comm, cluster=self.cluster, alpha=lpj.alpha,
+                beta=lpj.beta, unit=lpj.unit, excluded_nodes=dirty,
+                prev_placement=lpj.result.placement, dirty_nodes=dirty,
+            ))
+        finally:
+            self.cluster.allocate(occupied_by_jobs)
+            assert self.cluster.snapshot_free() == snapshot
+        lpj.result = result
+        return result
+
     def reserved_nodes(self) -> set[int]:
         if not self.reserve or self.lpj is None:
             return set()

@@ -19,8 +19,11 @@ that contract explicit:
   solver time-budget exhaustion (e.g. ``FallbackChain("mip", "topo-aware")``).
 
 The legacy entry points (``schedule_mip`` and the baseline functions in
-:mod:`repro.core.baselines`) remain available as thin shims over this
-registry, so both calling conventions resolve to the same implementations.
+:mod:`repro.core.baselines`) are deprecated thin shims over this registry
+(they warn on call); the registry is the only supported entry point
+(DESIGN.md §2.4).  The ``"hier"`` scale tier
+(:mod:`repro.core.hierarchical`) registers here too and composes as
+``FallbackChain("hier", "mip", "topo-aware")``.
 """
 
 from __future__ import annotations
@@ -54,6 +57,14 @@ class ScheduleRequest:
     solver wall-clock (MILP time limit); heuristic policies ignore it.
     ``seed``/``rng`` make randomized policies reproducible (``rng`` wins
     when both are given).
+
+    ``prev_placement``/``dirty_nodes`` are the warm-start contract
+    (DESIGN.md §8.2): a caller re-solving after incremental churn (a
+    failure, a few nodes drained) passes the placement it already has plus
+    the set of node ids that changed; a warm-start-capable scheduler
+    ("hier") repairs the placement locally instead of re-solving from
+    scratch, and every other scheduler simply ignores the hint -- so the
+    fields are safe to set unconditionally.
     """
 
     comm: CommMatrix
@@ -66,6 +77,8 @@ class ScheduleRequest:
     time_budget: float = 10.0
     seed: int = 0
     rng: Optional[np.random.Generator] = None
+    prev_placement: Optional[Placement] = None
+    dirty_nodes: frozenset[int] = frozenset()
     options: dict = dataclasses.field(default_factory=dict)  # method-specific
 
     def __post_init__(self):
@@ -75,6 +88,7 @@ class ScheduleRequest:
             raise ValueError(f"alpha must be >= 0, got {self.alpha}")
         self.excluded_nodes = frozenset(self.excluded_nodes)
         self.reserved_nodes = frozenset(self.reserved_nodes)
+        self.dirty_nodes = frozenset(self.dirty_nodes)
 
     def resolved_beta(self) -> float:
         return 1.0 - self.alpha if self.beta is None else self.beta
@@ -141,7 +155,7 @@ class Scheduler(Protocol):
 # ---------------------------------------------------------------------------
 
 _REGISTRY: dict[str, Scheduler] = {}
-_ALIASES = {"milp": "mip", "arnold": "mip"}
+_ALIASES = {"milp": "mip", "arnold": "mip", "hierarchical": "hier", "scale": "hier"}
 
 
 def _canon(name: str) -> str:
@@ -267,16 +281,22 @@ class FunctionScheduler:
 
 
 class FallbackChain:
-    """Try schedulers in order; return the first feasible result.
+    """Try schedulers in order; return the first feasible, on-time result.
 
     Links may be names or instances and are resolved lazily at schedule
     time, so a chain can reference policies registered after construction.
-    Each link sees the full ``request`` (including its time budget); a link
-    failing with :class:`Infeasible` -- which the MILP also raises on
-    time-budget exhaustion without an incumbent -- passes the request to the
-    next link.  The winning result's ``stats["fallbacks"]`` records the
-    failed attempts; if every link fails, one aggregate :class:`Infeasible`
-    is raised.
+    ``request.time_budget`` is the budget for the *whole chain*: each link
+    runs with the budget remaining when it starts, and a link fails either
+    by raising :class:`Infeasible` -- which the MILP also raises on
+    time-budget exhaustion without an incumbent -- or by returning only
+    after its remaining budget is spent (a placement delivered past the
+    deadline is useless to a real-time scheduling loop, so the chain
+    discards it and degrades to the next, cheaper link).  The final link is
+    exempt from the overrun check: a late placement beats no placement.
+
+    The winning result's ``stats["served_by"]`` records which link
+    produced it and ``stats["fallbacks"]`` the failed attempts; if every
+    link fails, one aggregate :class:`Infeasible` is raised.
     """
 
     def __init__(self, *schedulers: "str | Scheduler", name: Optional[str] = None):
@@ -290,15 +310,32 @@ class FallbackChain:
 
     def schedule(self, request: ScheduleRequest) -> ScheduleResult:
         failures: list[tuple[str, str]] = []
-        for link in self._links:
+        t_start = time.perf_counter()
+        for i, link in enumerate(self._links):
             sched = get_scheduler(link)
+            remaining = request.time_budget - (time.perf_counter() - t_start)
+            if remaining <= 0 and i < len(self._links) - 1:
+                # Out of budget: skip straight to the last (cheapest) link
+                # rather than burning more time on expensive middle links.
+                failures.append((sched.name, "chain time budget exhausted"))
+                continue
+            sub = dataclasses.replace(request, time_budget=max(remaining, 0.0))
+            t_link = time.perf_counter()
             try:
-                result = sched.schedule(request)
+                result = sched.schedule(sub)
             except Infeasible as exc:
                 failures.append((sched.name, str(exc)))
                 continue
+            elapsed = time.perf_counter() - t_link
+            if elapsed > remaining and i < len(self._links) - 1:
+                failures.append((
+                    sched.name,
+                    f"exceeded time budget ({elapsed:.3f}s > {remaining:.3f}s)",
+                ))
+                continue
+            result.stats = dict(result.stats, served_by=sched.name)
             if failures:
-                result.stats = dict(result.stats, fallbacks=list(failures))
+                result.stats["fallbacks"] = list(failures)
             return result
         detail = "; ".join(f"{n}: {msg}" for n, msg in failures)
         raise Infeasible(f"all schedulers in {self.name} failed: {detail}")
@@ -307,10 +344,14 @@ class FallbackChain:
 def _register_builtin_schedulers() -> None:
     # Imported here (not at module top) only to keep the privates' origin
     # obvious; baselines.py itself never imports this module at import time,
-    # so there is no cycle either way.
+    # so there is no cycle either way.  hierarchical.py *does* import this
+    # module, but by the time this function runs (module bottom) every name
+    # it needs is defined.
     from repro.core import baselines
+    from repro.core.hierarchical import HierarchicalScheduler
 
     register_scheduler("mip", MipScheduler())
+    register_scheduler("hier", HierarchicalScheduler())
     register_scheduler("best-fit", FunctionScheduler("best-fit", baselines._best_fit))
     register_scheduler(
         "random-fit",

@@ -36,6 +36,8 @@ class SimResult:
     preempted_at_lpj: int
     manual_preemptions: int    # non-preemptable squatters at LPJ arrival
     lpj_nodes: list[int]
+    failed_nodes: list[int] = dataclasses.field(default_factory=list)
+    lpj_replans: int = 0       # warm re-solves triggered by failure churn
 
     def mean_alloc(self) -> float:
         return float(np.mean([p.allocation_rate for p in self.series]))
@@ -54,12 +56,20 @@ class TraceSimulator:
         t_end: float,
         lpj_plan: Optional[tuple] = None,
         plan_at: float = 0.0,
+        failures: Optional[list[tuple[float, int]]] = None,
     ) -> SimResult:
         """Replay ``jobs``; if ``lpj_plan=(comm, arrival, alpha, unit)`` is
         given, the LPJ is planned at ``plan_at`` and admitted at arrival.
         An optional fifth element selects the scheduling policy for this
         LPJ -- a registry name, chain spec ("mip,topo-aware"), or Scheduler
-        instance -- overriding the queue policy's default."""
+        instance -- overriding the queue policy's default.
+
+        ``failures`` is a list of ``(time, node_id)`` hardware failures.
+        A failed node is quarantined (taken out of the free pool for good);
+        if it belongs to a still-pending LPJ reservation, the plan is
+        re-solved through :meth:`QueuePolicy.replan_lpj`, which hands
+        warm-start-capable schedulers the previous placement plus the
+        dirty set -- the churn path of DESIGN.md §8.2."""
         events: list[tuple[float, int, str, object]] = []
         eid = 0
 
@@ -79,6 +89,8 @@ class TraceSimulator:
             scheduler = rest[0] if rest else None
             push(plan_at, "plan", (comm, arrival, alpha, unit, scheduler))
             push(arrival, "lpj", None)
+        for ft, node in failures or []:
+            push(ft, "fail", node)
 
         series: list[TimePoint] = []
         delays: dict[int, float] = {}
@@ -86,6 +98,8 @@ class TraceSimulator:
         preempted_n = 0
         manual_n = 0
         lpj_nodes: list[int] = []
+        failed: list[int] = []
+        replans = 0
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
@@ -99,6 +113,19 @@ class TraceSimulator:
                 comm, arrival, alpha, unit, scheduler = payload
                 self.policy.plan_lpj(comm, arrival, alpha, unit=unit,
                                      scheduler=scheduler)
+            elif kind == "fail":
+                node = int(payload)
+                if self.policy.cluster.is_free(node):
+                    self.policy.cluster.allocate([node])  # quarantine
+                failed.append(node)
+                lpj = self.policy.lpj
+                if (
+                    lpj is not None and lpj.result is not None
+                    and t < lpj.arrival
+                    and node in lpj.reserved_nodes
+                ):
+                    self.policy.replan_lpj(dirty_nodes=frozenset(failed))
+                    replans += 1
             elif kind == "lpj":
                 lpj_nodes, preempted = self.policy.admit_lpj(t)
                 preempted_n = len(preempted)
@@ -126,6 +153,8 @@ class TraceSimulator:
             preempted_at_lpj=preempted_n,
             manual_preemptions=manual_n,
             lpj_nodes=lpj_nodes,
+            failed_nodes=failed,
+            lpj_replans=replans,
         )
 
 

@@ -80,6 +80,23 @@ class Cluster:
     def free_capacities(self) -> list[int]:
         return [len(self.free_in_minipod(p.pod_id)) for p in self.minipods]
 
+    def free_signature(self, quantum: int = 1) -> tuple[int, ...]:
+        """Hashable free-capacity fingerprint: per-minipod free counts
+        rounded *down* to a multiple of ``quantum`` nodes.
+
+        This is the canonical way to compare free-pool states (placement
+        cache keys, benchmark workload fingerprints) -- rounding down means
+        two states sharing a signature differ by less than ``quantum``
+        nodes in any minipod, so a placement solved for one is usually
+        still near-optimal for the other (DESIGN.md §8.3).
+        """
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        return tuple(
+            (len(self.free_in_minipod(p.pod_id)) // quantum) * quantum
+            for p in self.minipods
+        )
+
     def is_free(self, node_id: int) -> bool:
         return node_id in self._free
 

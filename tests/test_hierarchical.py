@@ -1,0 +1,291 @@
+"""Tests for the "hier" scale tier (DESIGN.md §8): block decomposition,
+paper-setting parity, warm-start repair, cache behaviour, and the
+queue/simulator churn path."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    FallbackChain,
+    HierarchicalScheduler,
+    JobSpec,
+    QueuePolicy,
+    ScheduleRequest,
+    ScheduleResult,
+    TraceSimulator,
+    build_comm_matrix,
+    get_scheduler,
+    weighted_spread,
+)
+
+BIG = (104, 96)  # ~10k-node uniform cluster (9984 nodes)
+
+
+def _fresh(**kw) -> HierarchicalScheduler:
+    """A scheduler with its own cache (registry instance's cache persists
+    across tests and would turn cold solves into hits)."""
+    return HierarchicalScheduler(**kw)
+
+
+def _valid(res: ScheduleResult, comm, cluster) -> None:
+    ids = res.placement.node_ids()
+    assert len(ids) == comm.n_cells == len(set(ids))
+    assert all(cluster.is_free(n) for n in ids)
+
+
+def big_job(model7b) -> JobSpec:
+    return JobSpec(n_gpus=4096, tp=8, pp=8, model=model7b)  # 512 nodes
+
+
+class TestRegistration:
+    def test_registered_with_aliases(self):
+        assert get_scheduler("hier").name == "hier"
+        assert get_scheduler("hierarchical") is get_scheduler("hier")
+        assert get_scheduler("scale") is get_scheduler("hier")
+
+    def test_composes_in_fallback_chain(self, small_comm, cluster_i):
+        res = FallbackChain("hier", "mip", "topo-aware").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        assert res.stats["served_by"] == "hier"
+        _valid(res, small_comm, cluster_i)
+
+
+class TestParity:
+    """On paper-setting clusters (single block) hier must match flat mip."""
+
+    def test_setting_i_spread_within_10pct(self, small_comm, cluster_i):
+        mip = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        hier = _fresh().schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        _valid(hier, small_comm, cluster_i)
+        sm = weighted_spread(mip.placement, 0.3)
+        sh = weighted_spread(hier.placement, 0.3)
+        assert sh <= sm * 1.1
+
+    def test_setting_iii_spread_within_10pct(self, model7b, cluster_iii):
+        comm = build_comm_matrix(big_job(model7b))
+        mip = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=comm, cluster=cluster_iii, alpha=0.3)
+        )
+        hier = _fresh().schedule(
+            ScheduleRequest(comm=comm, cluster=cluster_iii, alpha=0.3)
+        )
+        _valid(hier, comm, cluster_iii)
+        assert weighted_spread(hier.placement, 0.3) <= (
+            weighted_spread(mip.placement, 0.3) * 1.1
+        )
+        assert hier.stats["n_blocks"] == 1  # degenerates to flat MILP
+
+
+class TestDecomposition:
+    def test_multi_block_valid_placement(self, small_comm):
+        cluster = Cluster.uniform(8, 8)
+        res = _fresh().schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster, alpha=0.3,
+            options={"pods_per_block": 2},
+        ))
+        _valid(res, small_comm, cluster)
+        assert res.stats["n_blocks"] == 4
+        assert 1 <= res.stats["blocks_touched"] <= 4
+        assert res.method == "hier"
+
+    def test_seam_group_straddles_blocks(self, model7b):
+        # one 8-node group, blocks of one 6-node minipod: must straddle
+        cluster = Cluster.uniform(2, 6)
+        comm = build_comm_matrix(JobSpec(n_gpus=64, tp=8, pp=8, model=model7b))
+        res = _fresh().schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3,
+            options={"pods_per_block": 1},
+        ))
+        _valid(res, comm, cluster)
+        assert res.stats["blocks_touched"] == 2
+
+    def test_10k_nodes_subsecond(self, model7b):
+        cluster = Cluster.uniform(*BIG)
+        comm = build_comm_matrix(big_job(model7b))
+        res = _fresh().schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3, time_budget=1.0,
+        ))
+        _valid(res, comm, cluster)
+        assert res.solve_seconds < 1.0
+        assert res.stats["n_blocks"] > 1
+
+
+class TestWarmStart:
+    def _cold_then_fail(self, model7b, cluster):
+        comm = build_comm_matrix(big_job(model7b))
+        sched = _fresh()
+        cold = sched.schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3, time_budget=1.0,
+        ))
+        victim = cold.placement.node_ids()[0]
+        return sched, comm, cold, victim
+
+    def test_repair_correctness(self, model7b):
+        cluster = Cluster.uniform(*BIG)
+        sched, comm, cold, victim = self._cold_then_fail(model7b, cluster)
+        warm = sched.schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3, time_budget=1.0,
+            prev_placement=cold.placement,
+            dirty_nodes=frozenset([victim]),
+            excluded_nodes=frozenset([victim]),
+        ))
+        assert warm.method == "hier-warm"
+        assert warm.stats["warm_start"] is True
+        assert warm.stats["repaired"][0][0] == victim
+        _valid(warm, comm, cluster)
+        ids = set(warm.placement.node_ids())
+        assert victim not in ids
+        # only the failed node moved
+        assert len(ids ^ set(cold.placement.node_ids())) == 2
+
+    def test_repair_5x_faster_than_cold(self, model7b):
+        cluster = Cluster.uniform(*BIG)
+        sched, comm, cold, victim = self._cold_then_fail(model7b, cluster)
+        warm = sched.schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3, time_budget=1.0,
+            prev_placement=cold.placement,
+            dirty_nodes=frozenset([victim]),
+            excluded_nodes=frozenset([victim]),
+        ))
+        assert warm.method == "hier-warm"
+        assert warm.solve_seconds * 5 <= cold.solve_seconds
+
+    def test_large_churn_falls_back_to_cold(self, model7b):
+        cluster = Cluster.uniform(16, 16)
+        comm = build_comm_matrix(
+            JobSpec(n_gpus=1024, tp=8, pp=8, model=model7b))  # 128 nodes
+        sched = _fresh()
+        cold = sched.schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
+        dirty = frozenset(cold.placement.node_ids()[:9])  # > repair_max_dirty
+        res = sched.schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3,
+            prev_placement=cold.placement, dirty_nodes=dirty,
+            excluded_nodes=dirty,
+        ))
+        assert res.method != "hier-warm"
+        assert not (set(res.placement.node_ids()) & dirty)
+
+    def test_repair_max_dirty_knob(self, model7b):
+        cluster = Cluster.uniform(16, 16)
+        comm = build_comm_matrix(
+            JobSpec(n_gpus=1024, tp=8, pp=8, model=model7b))
+        sched = _fresh()
+        cold = sched.schedule(
+            ScheduleRequest(comm=comm, cluster=cluster, alpha=0.3))
+        victim = cold.placement.node_ids()[0]
+        res = sched.schedule(ScheduleRequest(
+            comm=comm, cluster=cluster, alpha=0.3,
+            prev_placement=cold.placement,
+            dirty_nodes=frozenset([victim]),
+            excluded_nodes=frozenset([victim]),
+            options={"repair_max_dirty": 0},
+        ))
+        assert res.method != "hier-warm"
+
+    def test_other_schedulers_ignore_warm_hint(self, small_comm, cluster_i):
+        cold = get_scheduler("mip").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3))
+        res = get_scheduler("mip").schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster_i, alpha=0.3,
+            prev_placement=cold.placement,
+            dirty_nodes=frozenset(cold.placement.node_ids()[:1]),
+        ))
+        assert res.method in ("milp", "greedy-proven-optimal", "greedy-incumbent")
+
+
+class TestCache:
+    def test_second_identical_request_hits(self, model7b):
+        cluster = Cluster.uniform(16, 16)
+        comm = build_comm_matrix(
+            JobSpec(n_gpus=1024, tp=8, pp=8, model=model7b))
+        sched = _fresh()
+        req = dict(comm=comm, cluster=cluster, alpha=0.3)
+        first = sched.schedule(ScheduleRequest(**req))
+        second = sched.schedule(ScheduleRequest(**req))
+        assert first.method == "hier"
+        assert second.method == "hier-cached"
+        assert second.stats["cache"]["hit"] is True
+        assert second.stats["cache"]["hits"] == 1
+        _valid(second, comm, cluster)
+
+    def test_use_cache_false_bypasses(self, model7b):
+        cluster = Cluster.uniform(16, 16)
+        comm = build_comm_matrix(
+            JobSpec(n_gpus=1024, tp=8, pp=8, model=model7b))
+        sched = _fresh()
+        req = dict(comm=comm, cluster=cluster, alpha=0.3,
+                   options={"use_cache": False})
+        sched.schedule(ScheduleRequest(**req))
+        again = sched.schedule(ScheduleRequest(**req))
+        assert again.method == "hier"
+        assert len(sched.cache) == 0
+
+    def test_hit_rate_reported_in_stats(self, model7b):
+        cluster = Cluster.uniform(16, 16)
+        comm = build_comm_matrix(
+            JobSpec(n_gpus=1024, tp=8, pp=8, model=model7b))
+        sched = _fresh()
+        req = dict(comm=comm, cluster=cluster, alpha=0.3)
+        sched.schedule(ScheduleRequest(**req))
+        res = sched.schedule(ScheduleRequest(**req))
+        assert res.stats["cache"]["hit_rate"] == pytest.approx(0.5)
+
+
+class TestChurnPath:
+    """QueuePolicy.replan_lpj + TraceSimulator failures (DESIGN.md §8.2)."""
+
+    def test_replan_requires_plan(self, small_comm):
+        policy = QueuePolicy(Cluster.uniform(4, 8))
+        with pytest.raises(ValueError, match="no planned LPJ"):
+            policy.replan_lpj(dirty_nodes=frozenset([0]))
+
+    def test_replan_repairs_reservation(self, small_comm):
+        policy = QueuePolicy(Cluster.uniform(4, 8), scheduler=_fresh())
+        policy.plan_lpj(small_comm, arrival=100.0, alpha=0.3)
+        victim = next(iter(policy.reserved_nodes()))
+        res = policy.replan_lpj(dirty_nodes=frozenset([victim]))
+        assert res.method == "hier-warm"
+        assert victim not in policy.reserved_nodes()
+        assert len(policy.reserved_nodes()) == small_comm.n_cells
+
+    def test_simulator_failure_triggers_replan(self, small_comm):
+        policy = QueuePolicy(Cluster.uniform(4, 8), scheduler=_fresh())
+        sim = TraceSimulator(policy, tick=60.0)
+        # plan at t=0; fail one reserved node at t=50 (before arrival)
+        res0 = policy.scheduler.schedule(ScheduleRequest(
+            comm=small_comm, cluster=policy.cluster, alpha=0.3))
+        victim = res0.placement.node_ids()[0]
+        res = sim.run(
+            [], t_end=300.0,
+            lpj_plan=(small_comm, 200.0, 0.3, "pp"),
+            plan_at=0.0,
+            failures=[(50.0, victim)],
+        )
+        assert res.failed_nodes == [victim]
+        assert res.lpj_replans == 1
+        assert victim not in res.lpj_nodes
+        assert len(res.lpj_nodes) == small_comm.n_cells
+
+    def test_simulator_failure_outside_reservation_no_replan(self, small_comm):
+        cluster = Cluster.uniform(4, 8)
+        policy = QueuePolicy(cluster, scheduler=_fresh())
+        sim = TraceSimulator(policy, tick=60.0)
+        planned = policy.scheduler.schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster, alpha=0.3))
+        outside = [n for n in range(cluster.n_nodes)
+                   if n not in planned.placement.node_ids()][0]
+        res = sim.run(
+            [], t_end=300.0,
+            lpj_plan=(small_comm, 200.0, 0.3, "pp"),
+            plan_at=0.0,
+            failures=[(50.0, outside)],
+        )
+        assert res.failed_nodes == [outside]
+        assert res.lpj_replans == 0

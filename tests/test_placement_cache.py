@@ -1,0 +1,130 @@
+"""Tests for Cluster.free_signature and the PlacementCache (DESIGN.md §8.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Cluster, PlacementCache
+
+
+class TestFreeSignature:
+    def test_full_cluster(self):
+        cluster = Cluster.uniform(3, 8)
+        assert cluster.free_signature() == (8, 8, 8)
+
+    def test_quantizes_down(self):
+        cluster = Cluster.uniform(3, 8)
+        cluster.allocate([0, 1, 2])  # minipod 0: 5 free
+        assert cluster.free_signature(1) == (5, 8, 8)
+        assert cluster.free_signature(4) == (4, 8, 8)
+        assert cluster.free_signature(8) == (0, 8, 8)
+
+    def test_hashable_and_restorable(self):
+        cluster = Cluster.uniform(2, 4)
+        sig = cluster.free_signature(2)
+        assert hash(sig) == hash((4, 4))
+        cluster.allocate([0])
+        assert cluster.free_signature(2) == (2, 4)
+        cluster.release([0])
+        assert cluster.free_signature(2) == sig
+
+    def test_small_drift_invisible_under_quantum(self):
+        a = Cluster.uniform(4, 20)
+        b = Cluster.uniform(4, 20)
+        b.allocate([0, 1, 2])  # pod 0: 17 free, same 16-bucket as 20
+        assert a.free_signature(8) == b.free_signature(8)
+
+    def test_bad_quantum_rejected(self):
+        with pytest.raises(ValueError, match="quantum"):
+            Cluster.uniform(2, 4).free_signature(0)
+
+
+class TestPlacementCache:
+    def _key(self, cache, cluster, small_comm, **kw):
+        defaults = dict(unit="pp", alpha=0.3, beta=0.7)
+        defaults.update(kw)
+        return cache.key(small_comm, cluster, **defaults)
+
+    def test_miss_then_hit_counters(self, small_comm):
+        cache = PlacementCache(quantum=4)
+        cluster = Cluster.uniform(4, 8)
+        free = np.array(cluster.free_capacities(), dtype=float)
+        key = self._key(cache, cluster, small_comm)
+        assert cache.lookup(key, free) is None
+        counts = np.zeros((6, 4), dtype=int)
+        counts[:, 0] = 1
+        counts[:, 1] = 1
+        cache.store(key, counts)
+        got = cache.lookup(key, free)
+        assert (got == counts).all()
+        assert (cache.stats.hits, cache.stats.misses) == (1, 1)
+        assert cache.stats.hit_rate() == pytest.approx(0.5)
+        assert cache.stats.as_dict()["hit_rate"] == pytest.approx(0.5)
+
+    def test_hit_returns_copy(self, small_comm):
+        cache = PlacementCache()
+        cluster = Cluster.uniform(4, 8)
+        free = np.array(cluster.free_capacities(), dtype=float)
+        key = self._key(cache, cluster, small_comm)
+        cache.store(key, np.ones((6, 4), dtype=int))
+        got = cache.lookup(key, free)
+        got[0, 0] = 99
+        assert cache.lookup(key, free)[0, 0] == 1
+
+    def test_stale_entry_revalidated_as_miss(self, small_comm):
+        """Quantized signature unchanged but a pod lost a node the cached
+        solution needs -> must miss, never produce an infeasible placement."""
+        cache = PlacementCache(quantum=8)
+        cluster = Cluster.uniform(4, 10)
+        key = self._key(cache, cluster, small_comm)
+        counts = np.zeros((6, 4), dtype=int)
+        counts[:, 0] = 1
+        counts[0, 0] = 5  # pod 0 carries all 10 of its nodes
+        counts[:, 1] = 1
+        cache.store(key, counts)
+        cluster.allocate([0])  # pod 0: 9 free, still in the 8-bucket
+        stale_key = self._key(cache, cluster, small_comm)
+        assert stale_key == key  # the quantized key cannot tell
+        free = np.array(cluster.free_capacities(), dtype=float)
+        assert cache.lookup(stale_key, free) is None
+        assert cache.stats.misses == 1
+
+    def test_key_separates_problems(self, small_comm, small_job):
+        from repro.core import JobSpec, build_comm_matrix
+
+        cache = PlacementCache()
+        cluster = Cluster.uniform(4, 8)
+        base = self._key(cache, cluster, small_comm)
+        assert self._key(cache, cluster, small_comm, alpha=0.5, beta=0.5) != base
+        assert self._key(cache, cluster, small_comm, unit="dp") != base
+        other = build_comm_matrix(
+            JobSpec(n_gpus=64, tp=8, pp=8, model=small_job.model))
+        assert self._key(cache, cluster, other) != base
+        assert cache.key(small_comm, cluster, "pp", 0.3, 0.7,
+                         extra=("ppb", 4)) != base
+        assert self._key(cache, Cluster.uniform(5, 8), small_comm) != base
+
+    def test_lru_eviction(self, small_comm):
+        cache = PlacementCache(maxsize=2)
+        cluster = Cluster.uniform(4, 8)
+        free = np.array(cluster.free_capacities(), dtype=float)
+        keys = [self._key(cache, cluster, small_comm, alpha=a)
+                for a in (0.1, 0.2, 0.3)]
+        for k in keys:
+            cache.store(k, np.zeros((6, 4), dtype=int))
+        assert len(cache) == 2
+        assert cache.lookup(keys[0], free) is None  # oldest evicted
+        assert cache.lookup(keys[2], free) is not None
+
+    def test_clear_resets_everything(self, small_comm):
+        cache = PlacementCache()
+        cluster = Cluster.uniform(4, 8)
+        key = self._key(cache, cluster, small_comm)
+        cache.store(key, np.zeros((6, 4), dtype=int))
+        cache.lookup(key, np.array(cluster.free_capacities(), dtype=float))
+        cache.clear()
+        assert len(cache) == 0
+        assert cache.stats.lookups == 0
+
+    def test_bad_quantum_rejected(self):
+        with pytest.raises(ValueError, match="quantum"):
+            PlacementCache(quantum=0)

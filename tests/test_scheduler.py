@@ -164,6 +164,22 @@ class _AlwaysInfeasible:
         raise Infeasible("synthetic failure")
 
 
+class _Slow:
+    """Valid result, delivered too late (real-world: MILP grinding past the
+    scheduling-loop deadline)."""
+
+    name = "slow"
+
+    def __init__(self, delay: float):
+        self._delay = delay
+
+    def schedule(self, request):
+        import time
+
+        time.sleep(self._delay)
+        return get_scheduler("topo-aware").schedule(request)
+
+
 class TestFallbackChain:
     def test_degrades_to_next_link(self, small_comm, cluster_i):
         chain = FallbackChain(_AlwaysInfeasible(), "topo-aware")
@@ -210,9 +226,60 @@ class TestFallbackChain:
         )
         assert "fallbacks" not in res.stats
 
+    def test_winning_link_recorded_in_served_by(self, small_comm, cluster_i):
+        res = FallbackChain("mip", "topo-aware").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster_i, alpha=0.3)
+        )
+        assert res.stats["served_by"] == "mip"
+
+    def test_slow_link_overrun_falls_through(self, small_comm, cluster_i):
+        """A link that returns after its remaining budget is spent is
+        discarded; the chain degrades and records why."""
+        chain = FallbackChain(_Slow(0.2), "topo-aware")
+        res = chain.schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster_i, alpha=0.3, time_budget=0.05,
+        ))
+        assert res.stats["served_by"] == "topo-aware"
+        name, msg = res.stats["fallbacks"][0]
+        assert name == "slow" and "time budget" in msg
+        assert len(res.placement.node_ids()) == small_comm.n_cells
+
+    def test_exhausted_budget_skips_middle_links(self, small_comm, cluster_i):
+        """Once the chain budget is gone, middle links are skipped outright
+        and only the final (cheapest) link still runs."""
+        chain = FallbackChain(_Slow(0.2), "mip", "topo-aware")
+        res = chain.schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster_i, alpha=0.3, time_budget=0.05,
+        ))
+        assert res.stats["served_by"] == "topo-aware"
+        names = [n for n, _ in res.stats["fallbacks"]]
+        assert names == ["slow", "mip"]
+        assert "exhausted" in res.stats["fallbacks"][1][1]
+
+    def test_final_link_exempt_from_overrun(self, small_comm, cluster_i):
+        """A late placement from the last link beats no placement."""
+        res = FallbackChain(_Slow(0.2)).schedule(ScheduleRequest(
+            comm=small_comm, cluster=cluster_i, alpha=0.3, time_budget=0.05,
+        ))
+        assert res.stats["served_by"] == "slow"
+
     def test_empty_chain_rejected(self):
         with pytest.raises(ValueError):
             FallbackChain()
+
+
+class TestDeprecatedShims:
+    def test_schedule_mip_warns(self, small_comm, cluster_i):
+        with pytest.warns(DeprecationWarning, match="get_scheduler"):
+            schedule_mip(small_comm, cluster_i, alpha=0.3)
+
+    @pytest.mark.parametrize("shim", ["best_fit", "gpu_packing", "random_fit",
+                                      "topo_aware"])
+    def test_baseline_shims_warn(self, shim, small_comm, cluster_i):
+        import repro.core.baselines as baselines
+
+        with pytest.warns(DeprecationWarning, match="get_scheduler"):
+            getattr(baselines, shim)(small_comm, cluster_i)
 
 
 class TestQueueIntegration:
