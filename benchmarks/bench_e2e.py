@@ -6,8 +6,14 @@ nodes, >50% of the cluster); dense models are PP-bound (DP-aligned gives no
 speedup), MoE gains from both groups; improvement grows with model scale
 (Fig. 5b).  Throughput comes from the calibrated BusBw/step-time model --
 the same methodology the paper uses for its own simulator experiments.
+
+``--fabric {clos,rail-only,torus,dragonfly,all}`` re-runs the comparison on
+a capacity-matched fabric of that family with its own calibrated network
+model (DESIGN.md §9.3); the default (no flag) is the CLOS path,
+bit-identical to the pre-fabric numbers.
 """
 
+import sys
 import time
 
 import numpy as np
@@ -21,6 +27,7 @@ from repro.core import (
     get_scheduler,
     throughput_of_placement,
 )
+from repro.topo import comparable_fabric, list_fabrics
 
 DENSE_24B = ModelSpec(
     name="dense-24b", hidden=6144, layers=52, vocab=100352, seq_len=4096,
@@ -30,6 +37,14 @@ MOE = ModelSpec(
     name="moe-132b", hidden=6144, layers=40, vocab=100352, seq_len=4096,
     global_batch=1024, micro_batch=1, n_experts=16, top_k=4, d_expert=10752,
 )
+
+
+def _cluster(n_pods: int, cap: int, fabric: "str | None") -> Cluster:
+    """Uniform cluster, optionally rebuilt on another fabric family with
+    the same per-domain capacities (``None`` = legacy CLOS path)."""
+    if fabric is None:
+        return Cluster.uniform(n_pods, cap)
+    return Cluster.from_fabric(comparable_fabric(fabric, [cap] * n_pods))
 
 
 def _compare(model, cluster, n_nodes, tp, pp, alpha, fragment_seed=None,
@@ -60,30 +75,31 @@ def _compare(model, cluster, n_nodes, tp, pp, alpha, fragment_seed=None,
     return gain, t_ours, t_base
 
 
-def run() -> list[tuple]:
+def run(fabric: "str | None" = None) -> list[tuple]:
+    tag = "" if fabric is None else f"{fabric}_"
     rows = []
     t0 = time.perf_counter()
 
     # medium scale: 26 nodes (208 GPUs, the paper's medium experiment),
     # fragmented mid-size cluster
     gain_med, to, tb = _compare(
-        DENSE_24B, Cluster.uniform(8, 24), n_nodes=26, tp=8, pp=2,
+        DENSE_24B, _cluster(8, 24, fabric), n_nodes=26, tp=8, pp=2,
         alpha=0.0, fragment_seed=1,
     )
-    rows.append(("e2e_medium_dense_gain_pct", (time.perf_counter() - t0) * 1e6,
+    rows.append((f"e2e_{tag}medium_dense_gain_pct", (time.perf_counter() - t0) * 1e6,
                  round(gain_med, 2)))
-    rows.append(("e2e_medium_spreads_ours_dp_pp", 0.0,
+    rows.append((f"e2e_{tag}medium_spreads_ours_dp_pp", 0.0,
                  f"{to['dp_spread']}/{to['pp_spread']}"))
-    rows.append(("e2e_medium_spreads_base_dp_pp", 0.0,
+    rows.append((f"e2e_{tag}medium_spreads_base_dp_pp", 0.0,
                  f"{tb['dp_spread']}/{tb['pp_spread']}"))
 
     # full scale: 1200 nodes (9600 GPUs) in a 2000-node cluster (>50% usage)
     gain_full, to, tb = _compare(
-        MOE, Cluster.uniform(16, 125), n_nodes=1200, tp=8, pp=8,
+        MOE, _cluster(16, 125, fabric), n_nodes=1200, tp=8, pp=8,
         alpha=0.3, fragment_seed=2, fragment_frac=0.3,
     )
-    rows.append(("e2e_full_9600gpu_moe_gain_pct", 0.0, round(gain_full, 2)))
-    rows.append(("e2e_full_comm_fraction", 0.0, round(to["comm_fraction"], 3)))
+    rows.append((f"e2e_{tag}full_9600gpu_moe_gain_pct", 0.0, round(gain_full, 2)))
+    rows.append((f"e2e_{tag}full_comm_fraction", 0.0, round(to["comm_fraction"], 3)))
 
     # Fig. 5b: improvement grows with model size.  Bigger models require
     # deeper pipelines (layers and PP scale together at fixed layers/stage),
@@ -95,17 +111,24 @@ def run() -> list[tuple]:
             name=f"dense-{layers}L", hidden=6144, layers=layers, vocab=100352,
             seq_len=4096, global_batch=1024, micro_batch=1, d_ff=24576,
         )
-        g, _, _ = _compare(model, Cluster.uniform(8, 24), nodes, 8, pp, 0.0,
+        g, _, _ = _compare(model, _cluster(8, 24, fabric), nodes, 8, pp, 0.0,
                            fragment_seed=3)
         gains.append(g)
-        rows.append((f"e2e_scaling_{layers}L_pp{pp}_gain_pct", 0.0, round(g, 2)))
-    rows.append(("paper_claim_gain_grows_with_size_ok", 0.0,
-                 int(gains[0] <= gains[1] + 0.3 and gains[1] <= gains[2] + 0.3)))
-    rows.append(("paper_claim_full_scale_gain_positive_ok", 0.0,
-                 int(gain_full > 0)))
+        rows.append((f"e2e_{tag}scaling_{layers}L_pp{pp}_gain_pct", 0.0, round(g, 2)))
+    if fabric is None:
+        rows.append(("paper_claim_gain_grows_with_size_ok", 0.0,
+                     int(gains[0] <= gains[1] + 0.3 and gains[1] <= gains[2] + 0.3)))
+        rows.append(("paper_claim_full_scale_gain_positive_ok", 0.0,
+                     int(gain_full > 0)))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(str(x) for x in r))
+    args = sys.argv[1:]
+    fabrics: "list[str | None]" = [None]
+    if "--fabric" in args:
+        which = args[args.index("--fabric") + 1]
+        fabrics = list(list_fabrics()) if which == "all" else [which]
+    for f in fabrics:
+        for r in run(fabric=f):
+            print(",".join(str(x) for x in r))

@@ -5,8 +5,13 @@ benchmark settings (i)(ii)(iii), sweeping the affinity alpha.
 Paper claims: up to 1.67x lower than the best baseline, 1.2x on average; all
 algorithms tie on the simple setting (i).  We also run fragmented-cluster
 variants (random 35% occupancy), which exercise the true MILP path.
+
+``--fabric {clos,rail-only,torus,dragonfly,all}`` re-runs the comparison on
+a capacity-matched fabric of that family (DESIGN.md §9); the default (no
+flag) is the paper's CLOS setting, bit-identical to the pre-fabric numbers.
 """
 
+import sys
 import time
 
 import numpy as np
@@ -21,6 +26,7 @@ from repro.core import (
     list_schedulers,
     weighted_spread,
 )
+from repro.topo import comparable_fabric, list_fabrics
 
 MODEL7B = ModelSpec(
     name="gpt-7b", hidden=4096, layers=32, vocab=50304, seq_len=2048,
@@ -30,9 +36,20 @@ SETTINGS = {"i": (12, 4, 2), "ii": (24, 4, 8), "iii": (46, 8, 8)}
 ALPHAS = (0.0, 0.1, 0.3, 0.5)
 
 
-def _one(setting: str, alpha: float, fragment: float, seed: int = 0):
-    dp, tp, pp = SETTINGS[setting]
+def _cluster_for(setting: str, fabric: "str | None") -> Cluster:
+    """Paper-setting cluster, optionally rebuilt on another fabric family
+    with the same per-domain capacities (``None`` = legacy CLOS path)."""
     cluster = Cluster.paper_setting(setting)
+    if fabric is None:
+        return cluster
+    caps = [p.capacity for p in cluster.minipods]
+    return Cluster.from_fabric(comparable_fabric(fabric, caps))
+
+
+def _one(setting: str, alpha: float, fragment: float, seed: int = 0,
+         fabric: "str | None" = None):
+    dp, tp, pp = SETTINGS[setting]
+    cluster = _cluster_for(setting, fabric)
     if fragment:
         rng = np.random.default_rng(seed)
         job_nodes = dp * tp * pp // 8
@@ -59,16 +76,17 @@ def _one(setting: str, alpha: float, fragment: float, seed: int = 0):
     return ours, base, best
 
 
-def run() -> list[tuple]:
+def run(fabric: "str | None" = None) -> list[tuple]:
+    tag = "" if fabric is None else f"{fabric}_"
     rows = []
     ratios = []
     for setting in SETTINGS:
         for alpha in ALPHAS:
             t0 = time.perf_counter()
-            ours, base, best = _one(setting, alpha, fragment=0.0)
+            ours, base, best = _one(setting, alpha, fragment=0.0, fabric=fabric)
             dt = (time.perf_counter() - t0) * 1e6
-            rows.append((f"spread_{setting}_a{alpha}_arnold", dt, round(ours, 3)))
-            rows.append((f"spread_{setting}_a{alpha}_bestbaseline", dt, round(best, 3)))
+            rows.append((f"spread_{tag}{setting}_a{alpha}_arnold", dt, round(ours, 3)))
+            rows.append((f"spread_{tag}{setting}_a{alpha}_bestbaseline", dt, round(best, 3)))
             if ours > 0:
                 ratios.append(best / ours)
             elif best > 0:
@@ -79,18 +97,25 @@ def run() -> list[tuple]:
     for setting in ("ii", "iii"):
         for alpha in (0.1, 0.3):
             t0 = time.perf_counter()
-            ours, base, best = _one(setting, alpha, fragment=0.35)
+            ours, base, best = _one(setting, alpha, fragment=0.35, fabric=fabric)
             dt = (time.perf_counter() - t0) * 1e6
-            rows.append((f"spread_frag_{setting}_a{alpha}_arnold", dt, round(ours, 3)))
-            rows.append((f"spread_frag_{setting}_a{alpha}_bestbaseline", dt, round(best, 3)))
+            rows.append((f"spread_frag_{tag}{setting}_a{alpha}_arnold", dt, round(ours, 3)))
+            rows.append((f"spread_frag_{tag}{setting}_a{alpha}_bestbaseline", dt, round(best, 3)))
             if ours > 0:
                 ratios.append(best / ours)
-    rows.append(("spread_mean_improvement_x", 0.0, round(float(np.mean(ratios)), 3)))
-    rows.append(("spread_max_improvement_x", 0.0, round(float(np.max(ratios)), 3)))
-    rows.append(("paper_claim_avg_1.2x_ok", 0.0, int(np.mean(ratios) >= 1.15)))
+    rows.append((f"spread_{tag}mean_improvement_x", 0.0, round(float(np.mean(ratios)), 3)))
+    rows.append((f"spread_{tag}max_improvement_x", 0.0, round(float(np.max(ratios)), 3)))
+    if fabric is None:
+        rows.append(("paper_claim_avg_1.2x_ok", 0.0, int(np.mean(ratios) >= 1.15)))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(str(x) for x in r))
+    args = sys.argv[1:]
+    fabrics: "list[str | None]" = [None]
+    if "--fabric" in args:
+        which = args[args.index("--fabric") + 1]
+        fabrics = list(list_fabrics()) if which == "all" else [which]
+    for f in fabrics:
+        for r in run(fabric=f):
+            print(",".join(str(x) for x in r))

@@ -1,0 +1,143 @@
+"""Cross-fabric scheduling comparison (DESIGN.md §9): Arnold's MILP vs the
+best classical baseline on capacity-matched clos / rail-only / torus /
+dragonfly fabrics, scored by Eq. 2 weighted spread and by simulated step
+time under each fabric's calibrated network model.
+
+Emits ``BENCH_topology.json`` (schema 1, :mod:`benchmarks._artifact`) with
+one Arnold-vs-best-baseline metric pair per fabric, so cross-PR tooling can
+track whether topology-aware placement keeps its edge off the paper's CLOS.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    Cluster,
+    JobSpec,
+    ModelSpec,
+    ScheduleRequest,
+    build_comm_matrix,
+    get_scheduler,
+    list_schedulers,
+    throughput_of_placement,
+    weighted_spread,
+)
+from repro.topo import comparable_fabric
+
+from benchmarks._artifact import artifact_path, write_bench
+
+BENCH_FILE = artifact_path("topology")
+
+#: fabrics under comparison; rows appear in the artifact in this order.
+FABRICS = ("clos", "rail-only", "torus", "dragonfly")
+
+MODEL = ModelSpec(
+    name="dense-24b", hidden=6144, layers=52, vocab=100352, seq_len=4096,
+    global_batch=1024, micro_batch=1, d_ff=24576,
+)
+
+#: Arnold-family tiers are not baselines (same policy family).
+_NON_BASELINES = ("mip", "hier")
+
+
+def _fragment(cluster: Cluster, n_cells: int, frac: float, seed: int) -> None:
+    """Occupy ``frac`` of the cluster at random, leaving room for the job."""
+    rng = np.random.default_rng(seed)
+    max_busy = cluster.n_nodes - n_cells
+    busy = rng.choice(
+        cluster.n_nodes,
+        size=min(int(frac * cluster.n_nodes), max_busy),
+        replace=False,
+    )
+    cluster.allocate([int(b) for b in busy])
+
+
+def _one_fabric(kind: str, caps: list, tp: int, pp: int, n_nodes: int,
+                alpha: float, frac: float, seed: int) -> dict:
+    """Arnold vs best baseline on one fabric: spread and simulated step time."""
+    comm = build_comm_matrix(JobSpec(n_gpus=n_nodes * 8, tp=tp, pp=pp, model=MODEL))
+
+    cluster = Cluster.from_fabric(comparable_fabric(kind, caps))
+    _fragment(cluster, comm.n_cells, frac, seed)
+    request = ScheduleRequest(comm=comm, cluster=cluster, alpha=alpha, seed=seed)
+    ours = get_scheduler("mip").schedule(request).placement
+    t_ours = throughput_of_placement(ours, steps=3)
+
+    best_name, best_spread, best_tp = None, float("inf"), None
+    for name in list_schedulers():
+        if name in _NON_BASELINES:
+            continue
+        try:
+            placement = get_scheduler(name).schedule(request).placement
+        except Exception:  # noqa: BLE001 -- infeasible baselines just lose
+            continue
+        s = weighted_spread(placement, alpha)
+        if s < best_spread:
+            best_name, best_spread = name, s
+            best_tp = throughput_of_placement(placement, steps=3)
+
+    ours_spread = weighted_spread(ours, alpha)
+    return {
+        "arnold_spread": float(ours_spread),
+        "baseline_spread": float(best_spread),
+        "arnold_step_s": float(t_ours["step_time_s"]),
+        "baseline_step_s": float(best_tp["step_time_s"]),
+        "arnold_tokens_per_s": float(t_ours["tokens_per_s"]),
+        "baseline_tokens_per_s": float(best_tp["tokens_per_s"]),
+        "gain_pct": 100.0 * (t_ours["tokens_per_s"] / best_tp["tokens_per_s"] - 1.0),
+        "best_baseline": best_name,
+    }
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    # 16 domains of 24 nodes; the job takes 64 nodes (512 GPUs) on the full
+    # run, 16 nodes on --smoke (same code path, CI-sized solve).
+    caps = [24] * 16
+    n_nodes, tp, pp = (16, 8, 2) if smoke else (64, 8, 4)
+    # smoke shrinks the job, so fragmentation is raised to keep the
+    # placement contended (otherwise every algorithm consolidates to 0)
+    alpha, frac, seed = 0.3, (0.8 if smoke else 0.35), 7
+
+    rows: list[tuple] = []
+    metrics: dict[str, float] = {}
+    best_names: dict[str, str] = {}
+    for kind in FABRICS:
+        t0 = time.perf_counter()
+        r = _one_fabric(kind, caps, tp, pp, n_nodes, alpha, frac, seed)
+        dt = (time.perf_counter() - t0) * 1e6
+        key = kind.replace("-", "_")
+        for m in ("arnold_spread", "baseline_spread",
+                  "arnold_step_s", "baseline_step_s", "gain_pct"):
+            metrics[f"{key}_{m}"] = round(r[m], 6)
+        best_names[key] = r["best_baseline"]
+        rows.append((f"topology_{key}_arnold_spread", dt, round(r["arnold_spread"], 3)))
+        rows.append((f"topology_{key}_baseline_spread", 0.0, round(r["baseline_spread"], 3)))
+        rows.append((f"topology_{key}_gain_pct", 0.0, round(r["gain_pct"], 2)))
+
+    write_bench(
+        "topology",
+        workload={
+            "model": MODEL.name,
+            "n_domains": len(caps),
+            "nodes_per_domain": caps[0],
+            "job_nodes": n_nodes,
+            "tp": tp,
+            "pp": pp,
+            "alpha": alpha,
+            "fragment_frac": frac,
+            "seed": seed,
+            "smoke": smoke,
+            "fabrics": ",".join(FABRICS),
+        },
+        metrics=metrics,
+        best_baselines=best_names,
+    )
+    rows.append(("topology_artifact", 0.0, BENCH_FILE.name))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(smoke="--smoke" in sys.argv[1:]):
+        print(",".join(str(x) for x in row))

@@ -30,6 +30,7 @@ from benchmarks import (
     bench_queue,
     bench_serve,
     bench_spread,
+    bench_topology,
     bench_volume,
     roofline_report,
 )
@@ -40,6 +41,7 @@ ALL = {
     "bench_spread": bench_spread,      # Figure 7 / Table 1
     "bench_latency": bench_latency,    # Figure 8 + scale tier -> BENCH_sched_latency.json
     "bench_e2e": bench_e2e,            # Figures 5 + 9 (simulated E2E)
+    "bench_topology": bench_topology,  # DESIGN.md §9 cross-fabric -> BENCH_topology.json
     "bench_queue": bench_queue,        # Figure 14 / Appendix H
     "bench_jct": bench_jct,            # Figure 13 / Appendix G
     "bench_breakdown": bench_breakdown,  # Figure 10 / Appendix I
@@ -47,7 +49,8 @@ ALL = {
     "roofline_report": roofline_report,  # §Roofline table from the dry-run
 }
 
-ALIASES = {"serve": "bench_serve", "latency": "bench_latency"}
+ALIASES = {"serve": "bench_serve", "latency": "bench_latency",
+           "topology": "bench_topology"}
 
 
 def artifact_of(mod) -> "pathlib.Path | None":

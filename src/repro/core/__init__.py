@@ -2,7 +2,8 @@
 
 The paper's primary contribution, as a composable library:
 
-* :mod:`repro.core.topology`     -- CLOS cluster model (minipods / racks / nodes)
+* :mod:`repro.core.topology`     -- cluster model over a pluggable fabric
+  (:mod:`repro.topo`: clos / rail-only / torus / dragonfly)
 * :mod:`repro.core.comm_matrix`  -- workload representation (Eq. 1, App. C)
 * :mod:`repro.core.spread`       -- spread metric + Eq. 2 objective
 * :mod:`repro.core.mip`          -- the MILP scheduler (Eq. 4-10)
@@ -39,7 +40,18 @@ from repro.core.hierarchical import HierarchicalScheduler
 from repro.core.jct import JCTPredictor, synthetic_trace
 from repro.core.mip import Infeasible, MipResult, schedule_mip
 from repro.core.placement_cache import CacheStats, PlacementCache
-from repro.core.netmodel import NetModel, NetModelConfig, simulate_step_time
+from repro.core.netmodel import (
+    ClosNetModel,
+    DragonflyNetModel,
+    FabricNetModel,
+    NetModel,
+    NetModelConfig,
+    RailOnlyNetModel,
+    TorusNetModel,
+    fabric_net_model,
+    register_fabric_net_model,
+    simulate_step_time,
+)
 from repro.core.queue import Job, QueuePolicy
 from repro.core.rank_assign import device_permutation, logical_to_physical_gpus
 from repro.core.scheduler import (
@@ -52,7 +64,8 @@ from repro.core.scheduler import (
     register_scheduler,
 )
 from repro.core.simulator import TraceSimulator, poisson_trace, throughput_of_placement
-from repro.core.spread import Placement, max_spreads, weighted_spread
-from repro.core.topology import Cluster, Minipod, Node
+from repro.core.spread import Placement, max_hop_diameters, max_spreads, weighted_spread
+from repro.core.topology import Cluster, Domain, Minipod, Node
+from repro.topo import Fabric, get_fabric, list_fabrics, register_fabric
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -49,7 +49,7 @@ def _take_from_pods(cluster: Cluster, pod_order: list[int], n: int) -> list[int]
     for j in pod_order:
         if len(out) >= n:
             break
-        out.extend(cluster.free_in_minipod(j)[: n - len(out)])
+        out.extend(cluster.free_in_domain(j)[: n - len(out)])
     if len(out) < n:
         raise Infeasible(f"cluster has only {len(out)} free nodes, need {n}")
     return out
@@ -57,32 +57,32 @@ def _take_from_pods(cluster: Cluster, pod_order: list[int], n: int) -> list[int]
 
 # ---------------------------------------------------------------------------
 def _best_fit(comm: CommMatrix, cluster: Cluster) -> Placement:
-    """Fill minipods with the *least* remaining free nodes first."""
+    """Fill domains with the *least* remaining free nodes first."""
     free = cluster.free_capacities()
     pods = sorted(
-        (j for j in range(cluster.n_minipods) if free[j] > 0),
+        (j for j in range(cluster.n_domains) if free[j] > 0),
         key=lambda j: (free[j], j),
     )
     return _materialize(comm, cluster, _take_from_pods(cluster, pods, comm.n_cells))
 
 
 def _gpu_packing(comm: CommMatrix, cluster: Cluster) -> Placement:
-    """Consolidate the job into the fewest minipods (largest-free-first)."""
+    """Consolidate the job into the fewest domains (largest-free-first)."""
     free = cluster.free_capacities()
     pods = sorted(
-        (j for j in range(cluster.n_minipods) if free[j] > 0),
+        (j for j in range(cluster.n_domains) if free[j] > 0),
         key=lambda j: (-free[j], j),
     )
     return _materialize(comm, cluster, _take_from_pods(cluster, pods, comm.n_cells))
 
 
 def _random_fit(comm: CommMatrix, cluster: Cluster, rng: np.random.Generator) -> Placement:
-    """Balanced random assignment: nodes drawn round-robin from minipods in
+    """Balanced random assignment: nodes drawn round-robin from domains in
     random order, so the load lands evenly (fair) but topology-blind."""
     free_lists = {
-        j: list(rng.permutation(cluster.free_in_minipod(j)))
-        for j in range(cluster.n_minipods)
-        if cluster.free_in_minipod(j)
+        j: list(rng.permutation(cluster.free_in_domain(j)))
+        for j in range(cluster.n_domains)
+        if cluster.free_in_domain(j)
     }
     order: list[int] = []
     pods = list(free_lists)
@@ -188,11 +188,16 @@ def _fm_bipartition(
 
 def _topo_aware(comm: CommMatrix, cluster: Cluster) -> Placement:
     """Hierarchical static mapping: recursively bi-partition the physical
-    graph (minipods, by free capacity) and map the job graph onto the two
-    halves with an FM min-cut of matching sizes [2, 10, 11]."""
+    graph (fabric domains, by free capacity) and map the job graph onto the
+    two halves with an FM min-cut of matching sizes [2, 10, 11].
+
+    The physical split delegates to the fabric's bisection structure
+    (:meth:`Cluster.partition_domains`): id-order halves on ``clos``
+    (identical to the pre-fabric behaviour), axis-aligned slabs on
+    ``torus``, group-coherent halves on ``dragonfly``."""
     adj = _job_graph(comm)
     free = cluster.free_capacities()
-    pods = [j for j in range(cluster.n_minipods) if free[j] > 0]
+    pods = [j for j in range(cluster.n_domains) if free[j] > 0]
     if sum(free[j] for j in pods) < comm.n_cells:
         raise Infeasible("not enough free nodes")
 
@@ -205,8 +210,7 @@ def _topo_aware(comm: CommMatrix, cluster: Cluster) -> Placement:
             for v in cells:
                 cell_to_pod[v] = pod_set[0]
             return
-        half = len(pod_set) // 2
-        pods_a, pods_b = pod_set[:half], pod_set[half:]
+        pods_a, pods_b = cluster.partition_domains(pod_set)
         cap_a = sum(free[j] for j in pods_a)
         size_a = min(cap_a, len(cells))
         # ensure part B fits too
@@ -223,7 +227,7 @@ def _topo_aware(comm: CommMatrix, cluster: Cluster) -> Placement:
     assignment = np.full((n_rows, n_cols), -1, dtype=int)
     for j in pods:
         cells = sorted(v for v, p in cell_to_pod.items() if p == j)
-        nodes = cluster.free_in_minipod(j)
+        nodes = cluster.free_in_domain(j)
         for v, nid in zip(cells, nodes):
             assignment[v // n_cols, v % n_cols] = nid
     return Placement(comm=comm, assignment=assignment, cluster=cluster)

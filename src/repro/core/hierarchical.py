@@ -94,6 +94,7 @@ class HierarchicalScheduler:
 
         with request.masked_cluster() as cluster:
             free = np.array(cluster.free_capacities(), dtype=float)
+            blocks = cluster.scheduling_blocks(ppb)
             cache_key = self.cache.key(
                 comm, cluster, request.unit, alpha, beta, extra=("ppb", ppb)
             )
@@ -102,7 +103,7 @@ class HierarchicalScheduler:
             stage_stats: dict = {}
             if counts is None:
                 counts, stage_stats = self._solve_hierarchical(
-                    group_size, n_groups, free, alpha, beta, request, ppb
+                    group_size, n_groups, free, alpha, beta, request, blocks
                 )
                 if use_cache:
                     self.cache.store(cache_key, counts)
@@ -137,19 +138,21 @@ class HierarchicalScheduler:
         alpha: float,
         beta: float,
         request,
-        pods_per_block: int,
+        blocks: list[list[int]],
     ) -> tuple[np.ndarray, dict]:
         """Coarse block solve + independent per-block fine solves.
 
-        Returns the global ``(n_groups, n_minipods)`` counts and per-stage
-        stats.  A single-block cluster short-circuits to the flat MILP.
+        ``blocks`` is the fabric's locality-coherent domain grouping
+        (:meth:`Cluster.scheduling_blocks`) -- contiguous id ranges on
+        ``clos`` (identical to the pre-fabric behaviour), torus slabs /
+        dragonfly groups elsewhere.  Returns the global
+        ``(n_groups, n_domains)`` counts and per-stage stats.  A
+        single-block cluster short-circuits to the flat MILP.
         """
         k = len(free)
         integral = request.options.get("integral_nodes", True)
         greedy = request.options.get("use_greedy_bound", True)
         budget = request.time_budget
-        blocks = [list(range(b, min(b + pods_per_block, k)))
-                  for b in range(0, k, pods_per_block)]
 
         if len(blocks) == 1:
             counts, _, _, method = _solve_counts(
@@ -234,8 +237,9 @@ class HierarchicalScheduler:
 
         Returns a result (method ``"hier-warm"``) or None to fall through
         to the cold path.  Replacement preference mirrors
-        :class:`FailureManager`: same minipod (spread unchanged), then a
-        minipod the affected groups already span, then any free node.
+        :class:`FailureManager`: same domain (spread unchanged), then a
+        domain the affected groups already span (nearest by fabric hop
+        distance first), then any free node.
         """
         from repro.core.scheduler import ScheduleResult
 
@@ -290,23 +294,25 @@ class HierarchicalScheduler:
         node: int,
         unusable: set[int],
     ) -> Optional[int]:
-        pod = cluster.nodes[node].minipod
+        pod = cluster.domain_of(node)
 
         def usable(p: int) -> list[int]:
-            return [n for n in cluster.free_in_minipod(p) if n not in unusable]
+            return [n for n in cluster.free_in_domain(p) if n not in unusable]
 
         local = usable(pod)
         if local:
             return local[0]
         r, c = np.argwhere(assignment == node)[0]
         group_pods = {
-            cluster.nodes[int(n)].minipod
+            cluster.domain_of(int(n))
             for n in np.concatenate([assignment[r, :], assignment[:, c]])
             if int(n) != node
         }
+        # Prefer domains the groups already span, then nearest by fabric
+        # hop distance (uniform on clos, so the order there is unchanged).
         candidates = sorted(
-            (p for p in range(cluster.n_minipods) if p != pod),
-            key=lambda p: (p not in group_pods, p),
+            (p for p in range(cluster.n_domains) if p != pod),
+            key=lambda p: (p not in group_pods, cluster.domain_distance(pod, p), p),
         )
         for p in candidates:
             avail = usable(p)

@@ -377,9 +377,9 @@ def _counts_to_placement(
         if not cells:
             continue
         cells.sort()
-        free_nodes = cluster.free_in_minipod(j)
+        free_nodes = cluster.free_in_domain(j)
         if len(free_nodes) < len(cells):
-            raise Infeasible(f"minipod {j} lacks free nodes at materialization")
+            raise Infeasible(f"domain {j} lacks free nodes at materialization")
         for (rank, r, c), nid in zip(cells, free_nodes):
             assignment[r, c] = nid
     return Placement(comm=comm, assignment=assignment, cluster=cluster)

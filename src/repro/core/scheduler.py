@@ -132,7 +132,9 @@ class ScheduleResult:
     stats: dict = dataclasses.field(default_factory=dict)
 
     def n_pods_used(self) -> int:
-        return int(len(np.unique(self.placement.minipod_of())))
+        """Distinct fabric domains (minipods on ``clos``) the placement
+        touches."""
+        return int(len(np.unique(self.placement.domain_of())))
 
     def weighted_spread(self, alpha: float, beta: Optional[float] = None) -> float:
         """Eq. 2 metric of this placement (validates ``alpha + beta == 1``)."""

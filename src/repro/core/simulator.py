@@ -16,9 +16,9 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.comm_matrix import CommMatrix
-from repro.core.netmodel import NetModel, simulate_step_time
+from repro.core.netmodel import NetModel, fabric_net_model, simulate_step_time
 from repro.core.queue import Job, QueuePolicy
-from repro.core.spread import Placement, max_spreads
+from repro.core.spread import Placement, max_hop_diameters, max_spreads
 
 
 @dataclasses.dataclass
@@ -171,15 +171,20 @@ def throughput_of_placement(
 ) -> dict:
     """Simulated tokens/sec of an LPJ under a placement.
 
-    The spread of the slowest DP and PP group feeds the calibrated BusBw
-    model; throughput = tokens per step / simulated step time.
+    The spread and hop diameter of the slowest DP and PP group feed the
+    calibrated BusBw model; throughput = tokens per step / simulated step
+    time.  ``net`` defaults to the placement's per-fabric model
+    (:func:`repro.core.netmodel.fabric_net_model`) -- on ``clos`` that is
+    output-identical to the legacy :class:`NetModel`.
     """
-    net = net or NetModel()
+    net = net or fabric_net_model(placement.cluster.fabric)
     rng = np.random.default_rng(seed)
     comm = placement.comm
     dp_s, pp_s = max_spreads(placement)
+    dp_h, pp_h = max_hop_diameters(placement)
     times = [
-        simulate_step_time(comm, dp_s, pp_s, net=net, rng=rng, **step_kw)
+        simulate_step_time(comm, dp_s, pp_s, net=net, rng=rng,
+                           dp_hops=dp_h, pp_hops_diameter=pp_h, **step_kw)
         for _ in range(steps)
     ]
     model = comm.job.model
@@ -188,6 +193,9 @@ def throughput_of_placement(
     return {
         "dp_spread": dp_s,
         "pp_spread": pp_s,
+        "dp_hop_diameter": dp_h,
+        "pp_hop_diameter": pp_h,
+        "fabric": placement.cluster.fabric.kind,
         "step_time_s": mean_t,
         "tokens_per_s": tokens / mean_t,
         "comm_fraction": float(np.mean([b.comm_fraction() for b in times])),

@@ -1,13 +1,19 @@
-"""Spread metric and scheduling objective (paper §5.2, Eq. 2-3).
+"""Spread metric and scheduling objective (paper §5.2, Eq. 2-3), fabric-generic.
 
-The *spread* of a communication group is the number of minipods its members
-straddle, derived from the discrete distance over one-hot placement vectors
-(Eq. 3): position ``i`` contributes 1 iff two members disagree there, so a
-group inside one minipod has distance 0, and a group spanning ``q > 1``
-minipods has distance ``q``.  The scheduling objective (Eq. 2) is the
-weighted sum of the *maximum* spread over DP groups (weight alpha) and PP
-groups (weight beta) -- max, because the slowest group stragglers the
-synchronous step.
+The *spread* of a communication group is the number of locality domains
+its members straddle (minipods on the paper's CLOS fabric), derived from
+the discrete distance over one-hot placement vectors (Eq. 3): position
+``i`` contributes 1 iff two members disagree there, so a group inside one
+domain has distance 0, and a group spanning ``q > 1`` domains has distance
+``q``.  The scheduling objective (Eq. 2) is the weighted sum of the
+*maximum* spread over DP groups (weight alpha) and PP groups (weight
+beta) -- max, because the slowest group stragglers the synchronous step.
+
+On fabrics with graded locality (torus, dragonfly) the domain count alone
+under-describes a placement, so :func:`max_hop_diameters` additionally
+reports each axis's worst *hop diameter* -- the max pairwise fabric
+distance among the domains a group touches -- which is what the
+per-fabric network models consume (DESIGN.md §9.3).
 """
 
 from __future__ import annotations
@@ -40,10 +46,19 @@ class Placement:
             raise ValueError("assignment maps two cells to the same node")
         self.assignment = a
 
+    def domain_of(self) -> np.ndarray:
+        """Fabric domain id per cell, same shape as the matrix.
+
+        One fancy-indexing gather through the cluster's precomputed
+        node->domain array -- this is on the hot path of every spread
+        evaluation (it used to be a per-cell ``np.vectorize`` Python
+        lookup)."""
+        return self.cluster.domain_index[self.assignment]
+
     def minipod_of(self) -> np.ndarray:
-        """Minipod id per cell, same shape as the matrix."""
-        pods = np.vectorize(lambda n: self.cluster.nodes[int(n)].minipod)
-        return pods(self.assignment)
+        """Historical ``clos`` name for :meth:`domain_of`; identical output
+        on every fabric (minipods are the clos fabric's domains)."""
+        return self.domain_of()
 
     def node_ids(self) -> list[int]:
         return [int(n) for n in self.assignment.ravel()]
@@ -61,22 +76,49 @@ def distance_onehot(vectors: np.ndarray) -> int:
     return int(np.count_nonzero(differs))
 
 
-def group_spread(minipods: np.ndarray, k: int | None = None) -> int:
-    """Spread of one group given integer minipod assignments.
+def group_spread(domains: np.ndarray, k: int | None = None) -> int:
+    """Spread of one group given integer domain assignments.
 
     Equivalent to ``distance_onehot`` on the one-hot encoding: 0 when all
-    members share a minipod, else the number of distinct minipods.
+    members share a domain, else the number of distinct domains.
     """
-    u = np.unique(np.asarray(minipods))
+    u = np.unique(np.asarray(domains))
     return 0 if len(u) <= 1 else int(len(u))
+
+
+def group_hop_diameter(domains: np.ndarray, cluster: Cluster) -> int:
+    """Worst pairwise fabric hop distance among the domains of one group
+    (0 when the group sits in a single domain)."""
+    u = np.unique(np.asarray(domains))
+    if len(u) <= 1:
+        return 0
+    return max(
+        cluster.domain_distance(int(a), int(b))
+        for i, a in enumerate(u)
+        for b in u[i + 1:]
+    )
 
 
 def max_spreads(placement: Placement) -> tuple[int, int]:
     """(max DP-group spread, max PP-group spread) of a placement."""
-    pods = placement.minipod_of()
+    pods = placement.domain_of()
     pp_spread = max(group_spread(pods[r, :]) for r in range(pods.shape[0]))
     dp_spread = max(group_spread(pods[:, c]) for c in range(pods.shape[1]))
     return dp_spread, pp_spread
+
+
+def max_hop_diameters(placement: Placement) -> tuple[int, int]:
+    """(max DP-group hop diameter, max PP-group hop diameter).
+
+    On ``clos`` every multi-domain group has the same diameter (all
+    minipods are equidistant through the core); on torus/dragonfly this is
+    the locality signal the per-fabric network models run on.
+    """
+    pods = placement.domain_of()
+    cluster = placement.cluster
+    pp = max(group_hop_diameter(pods[r, :], cluster) for r in range(pods.shape[0]))
+    dp = max(group_hop_diameter(pods[:, c], cluster) for c in range(pods.shape[1]))
+    return dp, pp
 
 
 def weighted_spread(placement: Placement, alpha: float, beta: float | None = None) -> float:
@@ -95,7 +137,7 @@ def weighted_spread(placement: Placement, alpha: float, beta: float | None = Non
 
 def mean_spreads(placement: Placement) -> tuple[float, float]:
     """Average (not max) spreads -- reported alongside the paper metric."""
-    pods = placement.minipod_of()
+    pods = placement.domain_of()
     pp = float(np.mean([group_spread(pods[r, :]) for r in range(pods.shape[0])]))
     dp = float(np.mean([group_spread(pods[:, c]) for c in range(pods.shape[1])]))
     return dp, pp

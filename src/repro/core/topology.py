@@ -1,27 +1,45 @@
-"""Physical data-center topology model (paper §2, Fig. 2b).
+"""Physical data-center topology model (paper §2, Fig. 2b; DESIGN.md §9).
 
-The cluster is a three-tier CLOS: nodes -> leaf switches (s0, one per rack)
--> spine switches (s1, one *minipod* per spine group) -> core switches.
-The paper's characterization (§4) shows training performance is dominated by
-the *minipod spread* of communication groups and is insensitive to
-intra-minipod topology (<= 0.3% variation), so the scheduling topology is
-modeled at minipod granularity, with racks retained for rank ordering.
+The paper's cluster is a three-tier CLOS: nodes -> leaf switches (s0, one
+per rack) -> spine switches (s1, one *minipod* per spine group) -> core
+switches.  Its characterization (§4) shows training performance is
+dominated by the *minipod spread* of communication groups and is
+insensitive to intra-minipod topology (<= 0.3% variation), so scheduling
+is modeled at minipod granularity.
 
-On the TPU target the "minipod" maps to an ICI pod / contiguous device block
-(see DESIGN.md §3); the same abstractions drive the mesh device permutation.
+Since the fabric subsystem (:mod:`repro.topo`), the minipod is one
+instance of the general concept: a :class:`Cluster` is built from any
+:class:`repro.topo.Fabric`, whose *locality domains* play the minipod
+role for every scheduler, the spread metric, and the network model.  The
+legacy ``Cluster(nodes_per_minipod=...)`` constructor is the ``clos``
+shorthand and behaves identically to the pre-fabric code (parity asserted
+in tests/test_topo.py).
+
+On the TPU target the "minipod" maps to an ICI pod / contiguous device
+block (see DESIGN.md §3); the ``torus`` fabric models that interconnect
+directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.topo import ClosFabric, Fabric
 
 GPUS_PER_NODE = 8
 
 
 @dataclasses.dataclass(frozen=True)
 class Node:
-    """A compute node: 8 accelerators under one NIC/leaf switch."""
+    """A compute node: 8 accelerators under one NIC/leaf switch.
+
+    ``minipod`` is the node's fabric *domain* id (the historical name is
+    kept; prefer :meth:`Cluster.domain_of` / ``Cluster.fabric`` for
+    fabric-generic code).
+    """
 
     node_id: int
     minipod: int
@@ -31,7 +49,8 @@ class Node:
 
 @dataclasses.dataclass
 class Minipod:
-    """Nodes under one spine switch (s1)."""
+    """One fabric locality domain (a spine group on ``clos``, a rail group
+    on ``rail-only``, a torus vertex, a dragonfly router)."""
 
     pod_id: int
     node_ids: list[int]
@@ -41,29 +60,59 @@ class Minipod:
         return len(self.node_ids)
 
 
+#: fabric-generic alias for :class:`Minipod`.
+Domain = Minipod
+
+
 class Cluster:
-    """Three-tier CLOS cluster at minipod granularity.
+    """A cluster of nodes over a pluggable fabric, at domain granularity.
 
     Tracks free/busy nodes; scheduling algorithms allocate from here.
+    ``Cluster(nodes_per_minipod=[...])`` is the ``clos`` shorthand
+    (builds a :class:`repro.topo.ClosFabric`); any other fabric comes in
+    through ``Cluster(fabric=...)`` / :meth:`from_fabric`.
     """
 
-    def __init__(self, nodes_per_minipod: Sequence[int], nodes_per_rack: int = 8):
+    def __init__(
+        self,
+        nodes_per_minipod: Optional[Sequence[int]] = None,
+        nodes_per_rack: int = 8,
+        *,
+        fabric: Optional[Fabric] = None,
+    ):
+        if (nodes_per_minipod is None) == (fabric is None):
+            raise ValueError(
+                "pass exactly one of nodes_per_minipod (clos shorthand) "
+                "or fabric"
+            )
+        if fabric is None:
+            fabric = ClosFabric(nodes_per_minipod, nodes_per_rack=nodes_per_rack)
+        self.fabric: Fabric = fabric
+        #: node id -> domain id, precomputed for hot-path vectorized lookups
+        #: (see Placement.domain_of in core/spread.py).
+        self.domain_index: np.ndarray = np.asarray(fabric.domain_index(), dtype=int)
+
         self.minipods: list[Minipod] = []
         self.nodes: dict[int, Node] = {}
-        nid = 0
-        for pod_id, n in enumerate(nodes_per_minipod):
-            ids = []
-            for i in range(n):
-                rack = i // nodes_per_rack
-                self.nodes[nid] = Node(node_id=nid, minipod=pod_id, rack=rack)
-                ids.append(nid)
-                nid += 1
-            self.minipods.append(Minipod(pod_id=pod_id, node_ids=ids))
+        rack_size = getattr(fabric, "nodes_per_rack", nodes_per_rack)
+        for pod_id in range(fabric.n_domains):
+            ids = fabric.domain_nodes(pod_id)
+            for slot, nid in enumerate(ids):
+                self.nodes[nid] = Node(
+                    node_id=nid, minipod=pod_id, rack=slot // rack_size
+                )
+            self.minipods.append(Minipod(pod_id=pod_id, node_ids=list(ids)))
         self._free: set[int] = set(self.nodes)
 
     # ------------------------------------------------------------------ state
     @property
     def n_minipods(self) -> int:
+        """Number of fabric domains (historical name; same as
+        :attr:`n_domains`)."""
+        return len(self.minipods)
+
+    @property
+    def n_domains(self) -> int:
         return len(self.minipods)
 
     @property
@@ -74,31 +123,55 @@ class Cluster:
     def n_free(self) -> int:
         return len(self._free)
 
+    def domain_of(self, node_id: int) -> int:
+        """Fabric domain id of a node (O(1) array lookup)."""
+        return int(self.domain_index[node_id])
+
     def free_in_minipod(self, pod_id: int) -> list[int]:
+        """Free nodes of one domain.  Historical ``clos`` name for
+        :meth:`free_in_domain`; both work on every fabric."""
         return sorted(n for n in self.minipods[pod_id].node_ids if n in self._free)
 
+    #: fabric-generic alias (the supported name for new code).
+    free_in_domain = free_in_minipod
+
     def free_capacities(self) -> list[int]:
-        return [len(self.free_in_minipod(p.pod_id)) for p in self.minipods]
+        return [len(self.free_in_domain(p.pod_id)) for p in self.minipods]
 
     def free_signature(self, quantum: int = 1) -> tuple[int, ...]:
-        """Hashable free-capacity fingerprint: per-minipod free counts
+        """Hashable free-capacity fingerprint: per-domain free counts
         rounded *down* to a multiple of ``quantum`` nodes.
 
         This is the canonical way to compare free-pool states (placement
         cache keys, benchmark workload fingerprints) -- rounding down means
         two states sharing a signature differ by less than ``quantum``
-        nodes in any minipod, so a placement solved for one is usually
+        nodes in any domain, so a placement solved for one is usually
         still near-optimal for the other (DESIGN.md §8.3).
         """
         if quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {quantum}")
         return tuple(
-            (len(self.free_in_minipod(p.pod_id)) // quantum) * quantum
+            (len(self.free_in_domain(p.pod_id)) // quantum) * quantum
             for p in self.minipods
         )
 
     def is_free(self, node_id: int) -> bool:
         return node_id in self._free
+
+    # ------------------------------------------------------- fabric structure
+    def domain_distance(self, a: int, b: int) -> int:
+        """Hop distance between two domains (delegates to the fabric)."""
+        return self.fabric.domain_distance(a, b)
+
+    def partition_domains(
+        self, domains: Sequence[int]
+    ) -> tuple[list[int], list[int]]:
+        """Fabric-aware bisection of a domain set (recursive mappers)."""
+        return self.fabric.partition(domains)
+
+    def scheduling_blocks(self, block_size: int) -> list[list[int]]:
+        """Locality-coherent domain blocks for the hierarchical tier."""
+        return self.fabric.scheduling_blocks(block_size)
 
     # ------------------------------------------------------------- transitions
     def allocate(self, node_ids: Iterable[int]) -> None:
@@ -119,6 +192,11 @@ class Cluster:
 
     # ---------------------------------------------------------------- factories
     @classmethod
+    def from_fabric(cls, fabric: Fabric) -> "Cluster":
+        """Cluster over an explicit fabric instance."""
+        return cls(fabric=fabric)
+
+    @classmethod
     def uniform(cls, n_minipods: int, nodes_per_minipod: int, **kw) -> "Cluster":
         return cls([nodes_per_minipod] * n_minipods, **kw)
 
@@ -137,4 +215,7 @@ class Cluster:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         caps = self.free_capacities()
-        return f"Cluster(minipods={self.n_minipods}, nodes={self.n_nodes}, free={caps})"
+        return (
+            f"Cluster(fabric={self.fabric.kind}, domains={self.n_domains}, "
+            f"nodes={self.n_nodes}, free={caps})"
+        )

@@ -221,6 +221,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                     rules=rules, unroll_microbatches=True)
             compiled_a = lowered_a.compile()
             c = compiled_a.cost_analysis()
+            # Newer JAX returns a one-element list of per-program dicts.
+            if isinstance(c, (list, tuple)):
+                c = c[0] if c else {}
             coll = parse_collective_bytes(compiled_a.as_text())
             return (float(c.get("flops", 0.0)),
                     float(c.get("bytes accessed", 0.0)), coll)

@@ -1,0 +1,371 @@
+"""Tests for the pluggable fabric subsystem (repro.topo, DESIGN.md §9).
+
+Covers the registry, per-fabric hop-distance metric properties
+(identity / symmetry / diameter bound, randomized over domain pairs),
+CLOS parity of the fabric-generic spread and scheduling paths against the
+pre-fabric behaviour, and the per-fabric network-model dispatch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    JobSpec,
+    ModelSpec,
+    NetModel,
+    Placement,
+    ScheduleRequest,
+    build_comm_matrix,
+    get_scheduler,
+    max_spreads,
+    weighted_spread,
+)
+from repro.core.netmodel import (
+    ClosNetModel,
+    DragonflyNetModel,
+    FabricNetModel,
+    RailOnlyNetModel,
+    TorusNetModel,
+    fabric_net_model,
+    simulate_step_time,
+)
+from repro.core.spread import distance_onehot, group_spread, max_hop_diameters
+from repro.topo import (
+    BaseFabric,
+    ClosFabric,
+    DragonflyFabric,
+    RailOnlyFabric,
+    TorusFabric,
+    comparable_fabric,
+    fabric_class,
+    get_fabric,
+    list_fabrics,
+    register_fabric,
+)
+
+
+def sample_fabrics():
+    """One small instance per family (non-uniform where the family allows)."""
+    return [
+        ClosFabric([6, 5, 7]),
+        RailOnlyFabric([4, 4, 4, 4], rails=4),
+        TorusFabric((2, 3), nodes_per_domain=4),
+        TorusFabric((2, 2, 3), nodes_per_domain=2),
+        DragonflyFabric(n_groups=3, routers_per_group=2, nodes_per_router=4),
+    ]
+
+
+# ---------------------------------------------------------------- registry
+class TestRegistry:
+    def test_required_fabrics_registered(self):
+        assert {"clos", "rail-only", "torus", "dragonfly"} <= set(list_fabrics())
+
+    def test_aliases_resolve(self):
+        assert fabric_class("rail") is RailOnlyFabric
+        assert fabric_class("minipod") is ClosFabric
+        assert fabric_class("fat-tree") is ClosFabric
+
+    def test_get_fabric_instantiates(self):
+        fab = get_fabric("clos", [4, 4])
+        assert isinstance(fab, ClosFabric) and fab.n_nodes == 8
+
+    def test_unknown_fabric_raises(self):
+        with pytest.raises(KeyError):
+            fabric_class("hypercube")
+
+    def test_duplicate_registration_requires_overwrite(self):
+        with pytest.raises(ValueError):
+            register_fabric("clos", ClosFabric)
+
+
+# ----------------------------------------------------- hop-distance metric
+class TestDistanceProperties:
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_identity_symmetry_bounds(self, fab):
+        """d(a,a)=0, d(a,b)=d(b,a), 0 <= d <= diameter -- randomized pairs."""
+        rng = np.random.default_rng(0)
+        diam = fab.diameter()
+        for _ in range(200):
+            a, b = rng.integers(0, fab.n_domains, size=2)
+            d = fab.domain_distance(int(a), int(b))
+            assert d == fab.domain_distance(int(b), int(a))
+            assert 0 <= d <= diam
+            if a == b:
+                assert d == 0
+        assert fab.domain_distance(0, 0) == 0
+
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_diameter_attained(self, fab):
+        dists = [
+            fab.domain_distance(a, b)
+            for a in range(fab.n_domains)
+            for b in range(fab.n_domains)
+        ]
+        assert max(dists) == fab.diameter()
+
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_distance_at_spread_matches_bruteforce(self, fab):
+        """distance_at_spread(q) is the tightest q-domain ball's diameter."""
+        k = fab.n_domains
+        mat = np.array(
+            [[fab.domain_distance(a, b) for b in range(k)] for a in range(k)]
+        )
+        for q in range(2, k + 1):
+            # brute force: for every center, the q nearest domains' diameter
+            best = None
+            for c in range(k):
+                near = np.argsort(mat[c], kind="stable")[:q]
+                diam = int(mat[np.ix_(near, near)].max())
+                best = diam if best is None else min(best, diam)
+            assert fab.distance_at_spread(q) == best, (fab.kind, q)
+        assert fab.distance_at_spread(1) == 0
+
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_distance_at_spread_monotone(self, fab):
+        vals = [fab.distance_at_spread(q) for q in range(1, fab.n_domains + 1)]
+        assert vals[0] == 0
+        assert all(a <= b for a, b in zip(vals, vals[1:]))
+        assert vals[-1] <= fab.diameter()
+
+    def test_torus_wraparound_known_values(self):
+        fab = TorusFabric((4, 4), nodes_per_domain=2)
+        # domain ids are row-major over the 4x4 grid
+        assert fab.domain_distance(0, 1) == 1       # (0,0)-(0,1)
+        assert fab.domain_distance(0, 3) == 1       # (0,0)-(0,3) wraps
+        assert fab.domain_distance(0, 12) == 1      # (0,0)-(3,0) wraps
+        assert fab.domain_distance(0, 10) == 4      # (0,0)-(2,2): 2+2
+        assert fab.diameter() == 4                  # (2, 2) opposite corner
+
+    def test_dragonfly_two_level_distances(self):
+        fab = DragonflyFabric(n_groups=2, routers_per_group=3, nodes_per_router=2)
+        assert fab.domain_distance(0, 1) == 1   # same group
+        assert fab.domain_distance(0, 3) == 3   # across groups
+        assert fab.distance_at_spread(3) == 1   # fits one group
+        assert fab.distance_at_spread(4) == 3
+
+    def test_clos_uniform_inter_pod(self):
+        fab = ClosFabric([4, 4, 4])
+        for a in range(3):
+            for b in range(3):
+                assert fab.domain_distance(a, b) == (0 if a == b else 2)
+
+
+# ------------------------------------------------------------- fabric shape
+class TestFabricStructure:
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_domain_index_consistent(self, fab):
+        idx = fab.domain_index()
+        assert len(idx) == fab.n_nodes
+        for d in range(fab.n_domains):
+            nodes = fab.domain_nodes(d)
+            assert all(idx[n] == d for n in nodes)
+        assert sum(len(fab.domain_nodes(d)) for d in range(fab.n_domains)) == fab.n_nodes
+
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_partition_covers(self, fab):
+        ds = list(range(fab.n_domains))
+        a, b = fab.partition(ds)
+        assert sorted(a + b) == ds
+        assert abs(len(a) - len(b)) <= 1
+
+    @pytest.mark.parametrize("fab", sample_fabrics(), ids=lambda f: f.kind)
+    def test_scheduling_blocks_partition(self, fab):
+        blocks = fab.scheduling_blocks(2)
+        flat = sorted(d for blk in blocks for d in blk)
+        assert flat == list(range(fab.n_domains))
+        assert all(1 <= len(blk) <= 2 for blk in blocks)
+
+    def test_comparable_fabric_preserves_capacity(self):
+        caps = [5, 7, 6, 6, 8, 4]
+        for kind in ("clos", "rail-only", "torus", "dragonfly"):
+            fab = comparable_fabric(kind, caps)
+            assert fab.n_nodes == sum(caps), kind
+            assert fab.n_domains == len(caps), kind
+            got = sorted(len(fab.domain_nodes(d)) for d in range(fab.n_domains))
+            assert got == sorted(caps), kind
+
+
+# ------------------------------------------------------------- CLOS parity
+class TestClosParity:
+    def test_cluster_requires_exactly_one_source(self):
+        with pytest.raises(ValueError):
+            Cluster()
+        with pytest.raises(ValueError):
+            Cluster([4, 4], fabric=ClosFabric([4, 4]))
+
+    def test_legacy_ctor_equals_from_fabric(self):
+        a = Cluster([6, 5, 7])
+        b = Cluster.from_fabric(ClosFabric([6, 5, 7]))
+        assert a.n_domains == b.n_domains == a.n_minipods
+        assert [p.node_ids for p in a.minipods] == [p.node_ids for p in b.minipods]
+        assert all(
+            a.nodes[n].minipod == b.nodes[n].minipod
+            and a.nodes[n].rack == b.nodes[n].rack
+            for n in a.nodes
+        )
+        np.testing.assert_array_equal(a.domain_index, b.domain_index)
+
+    def test_minipod_accessors_alias_domain_accessors(self):
+        c = Cluster([4, 4, 4])
+        assert c.n_minipods == c.n_domains
+        assert c.free_in_minipod(1) == c.free_in_domain(1)
+        assert c.domain_of(5) == c.nodes[5].minipod
+
+    def test_domain_of_matches_vectorize_lookup(self, small_comm):
+        """Satellite 1: the precomputed-index gather equals the old
+        per-cell np.vectorize Python lookup."""
+        cluster = Cluster.paper_setting("i")
+        rng = np.random.default_rng(3)
+        for _ in range(20):
+            nodes = rng.choice(cluster.n_nodes, size=small_comm.n_cells,
+                               replace=False)
+            p = Placement(small_comm, nodes.reshape(small_comm.shape), cluster)
+            legacy = np.vectorize(lambda n: cluster.nodes[int(n)].minipod)(
+                p.assignment
+            )
+            np.testing.assert_array_equal(p.domain_of(), legacy)
+            np.testing.assert_array_equal(p.minipod_of(), legacy)
+
+    def test_spread_parity_on_clos(self, small_comm):
+        """Fabric-generic spread == legacy minipod spread for identical
+        random placements on both construction paths."""
+        legacy = Cluster.paper_setting("i")
+        fabric = Cluster.from_fabric(
+            ClosFabric([p.capacity for p in legacy.minipods])
+        )
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            nodes = rng.choice(legacy.n_nodes, size=small_comm.n_cells,
+                               replace=False)
+            a = nodes.reshape(small_comm.shape)
+            pl = Placement(small_comm, a, legacy)
+            pf = Placement(small_comm, a, fabric)
+            assert max_spreads(pl) == max_spreads(pf)
+            assert weighted_spread(pl, 0.3) == weighted_spread(pf, 0.3)
+
+    @pytest.mark.parametrize("name", ["mip", "hier", "best-fit", "gpu-packing",
+                                      "topo-aware", "random-fit"])
+    def test_scheduler_parity_on_clos(self, small_comm, name):
+        """Every scheduler produces identical spreads on the legacy ctor
+        and the explicit clos-fabric ctor (acceptance criterion)."""
+        legacy = Cluster.paper_setting("ii")
+        fabric = Cluster.from_fabric(
+            ClosFabric([p.capacity for p in legacy.minipods])
+        )
+        r1 = get_scheduler(name).schedule(
+            ScheduleRequest(comm=small_comm, cluster=legacy, alpha=0.3, seed=0))
+        r2 = get_scheduler(name).schedule(
+            ScheduleRequest(comm=small_comm, cluster=fabric, alpha=0.3, seed=0))
+        assert (r1.dp_spread, r1.pp_spread) == (r2.dp_spread, r2.pp_spread)
+
+    def test_hop_diameter_on_clos_is_cross_pod_distance(self, small_comm):
+        cluster = Cluster.uniform(2, 12)
+        a = np.arange(small_comm.n_cells).reshape(small_comm.shape)
+        p = Placement(small_comm, a, cluster)
+        dp_s, pp_s = max_spreads(p)
+        dp_h, pp_h = max_hop_diameters(p)
+        assert (dp_h == 0) == (dp_s <= 1)
+        assert dp_h in (0, 2) and pp_h in (0, 2)
+
+
+# ------------------------------------------------------ distance_onehot prop
+class TestDistanceOnehotPermutation:
+    def test_permutation_invariance(self):
+        """Eq. 3 is invariant under permuting group members AND under
+        relabeling the one-hot positions (randomized)."""
+        rng = np.random.default_rng(11)
+        for _ in range(100):
+            n, k = int(rng.integers(2, 16)), int(rng.integers(2, 10))
+            assign = rng.integers(0, k, size=n)
+            v = np.zeros((n, k))
+            v[np.arange(n), assign] = 1
+            base = distance_onehot(v)
+            assert base == distance_onehot(v[rng.permutation(n)])
+            assert base == distance_onehot(v[:, rng.permutation(k)])
+            assert base == group_spread(assign)
+
+
+# --------------------------------------------------------------- net models
+class TestFabricNetModels:
+    def test_dispatch_by_kind(self):
+        assert isinstance(fabric_net_model(ClosFabric([4, 4])), ClosNetModel)
+        assert isinstance(
+            fabric_net_model(RailOnlyFabric([4, 4])), RailOnlyNetModel)
+        assert isinstance(
+            fabric_net_model(TorusFabric((2, 2), nodes_per_domain=2)),
+            TorusNetModel)
+        assert isinstance(
+            fabric_net_model(DragonflyFabric(2, 2, 2)), DragonflyNetModel)
+
+    def test_unknown_kind_gets_generic_model(self):
+        class WeirdFabric(BaseFabric):
+            kind = "weird"
+
+            def domain_distance(self, a, b):
+                return 0 if a == b else 1
+
+            def diameter(self):
+                return 1
+
+        m = fabric_net_model(WeirdFabric([2, 2]))
+        assert type(m) is FabricNetModel
+
+    def test_clos_model_identical_to_legacy(self, small_comm):
+        """ClosNetModel must be output-identical to the pre-fabric NetModel
+        (bench_e2e parity on clos hinges on this)."""
+        legacy = NetModel()
+        fab = ClosNetModel(ClosFabric([8] * 8))
+        for spread in range(0, 9):
+            for size in (1e6, 64e6, 2e9):
+                assert legacy.collective_busbw(size, spread) == pytest.approx(
+                    fab.collective_busbw(size, spread))
+                assert legacy.p2p_busbw(size, spread) == pytest.approx(
+                    fab.p2p_busbw(size, spread))
+        t1 = simulate_step_time(small_comm, 2, 1, net=legacy,
+                                rng=np.random.default_rng(0))
+        t2 = simulate_step_time(small_comm, 2, 1, net=fab,
+                                rng=np.random.default_rng(0))
+        assert t1.total == pytest.approx(t2.total)
+
+    @pytest.mark.parametrize("fab,model_cls", [
+        (RailOnlyFabric([8] * 8), RailOnlyNetModel),
+        (TorusFabric((2, 4), nodes_per_domain=8), TorusNetModel),
+        (DragonflyFabric(2, 4, 8), DragonflyNetModel),
+    ], ids=["rail-only", "torus", "dragonfly"])
+    def test_busbw_monotone_in_hops(self, fab, model_cls):
+        """More hops never increases bandwidth under any fabric model."""
+        m = model_cls(fab)
+        size = 64e6
+        prev_c = prev_p = None
+        for hops in range(0, fab.diameter() + 1):
+            c = m.collective_busbw(size, spread=2, hops=hops)
+            p = m.p2p_busbw(size, spread=2, hops=hops)
+            assert c > 0 and p > 0
+            if prev_c is not None:
+                assert c <= prev_c + 1e-9
+                assert p <= prev_p + 1e-9
+            prev_c, prev_p = c, p
+
+
+# --------------------------------------------------------------- schedulers
+class TestSchedulersOnFabrics:
+    @pytest.mark.parametrize("kind", ["rail-only", "torus", "dragonfly"])
+    def test_mip_and_hier_run_on_fabric(self, small_comm, kind):
+        cluster = Cluster.from_fabric(comparable_fabric(kind, [8] * 8))
+        for name in ("mip", "hier"):
+            res = get_scheduler(name).schedule(
+                ScheduleRequest(comm=small_comm, cluster=cluster, alpha=0.3))
+            assert res.placement.assignment.shape == small_comm.shape
+            assert res.dp_spread >= 0 and res.pp_spread >= 0
+
+    def test_hier_blocks_follow_fabric(self, small_comm):
+        """On dragonfly, hier's coarse blocks are the fabric's groups."""
+        fab = DragonflyFabric(n_groups=4, routers_per_group=2, nodes_per_router=6)
+        blocks = fab.scheduling_blocks(2)
+        assert blocks == [[0, 1], [2, 3], [4, 5], [6, 7]]
+        cluster = Cluster.from_fabric(fab)
+        res = get_scheduler("hier").schedule(
+            ScheduleRequest(comm=small_comm, cluster=cluster, alpha=0.3,
+                            options={"pods_per_block": 2}))
+        assert res.stats["n_blocks"] == 4
